@@ -1,0 +1,49 @@
+"""Paper §IV area-overhead argument: encoder count scales linearly with SA
+side length while PE count scales quadratically, so the relative overhead
+of the proposed logic shrinks with array size.
+
+We validate the *energy* analogue with the power model: the proposed
+design's overhead share (zero-detectors + encoders + decode XORs) falls as
+the array grows from 8x8 to 128x128 (MXU geometry), for the same workload.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import power, systolic
+
+from .common import row, timed
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    A = np.abs(rng.standard_normal((256, 512))).astype(np.float32)
+    A[rng.random(A.shape) < 0.55] = 0.0
+    W = (rng.standard_normal((512, 256)) * 0.05).astype(np.float32)
+    Aj, Wj = jnp.asarray(A), jnp.asarray(W)
+
+    print("# overhead share of proposed-design energy vs SA size")
+    shares = {}
+    for n in (8, 16, 32, 64, 128):
+        def run(n=n):
+            rep = systolic.sa_stream_report(
+                Aj, Wj, systolic.SAGeometry(n, n))
+            pw = power.sa_power(rep)
+            return (float(pw["proposed"]["overhead"])
+                    / float(pw["proposed"]["total"]),
+                    float(pw["saving_total"]))
+
+        (share, saving), us = timed(run, iters=1)
+        shares[n] = share
+        row(f"overhead_share_{n}x{n}", us,
+            f"{share*100:.2f}% (saving={saving*100:.1f}%)")
+    mono = all(shares[a] >= shares[b] - 1e-4 for a, b in
+               zip((8, 16, 32, 64), (16, 32, 64, 128)))
+    print(f"#   overhead share monotonically falls with array size: "
+          f"{'CONFIRMED' if mono else 'REFUTED'} "
+          f"(paper: 5.7% area overhead at 16x16, shrinking with size)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark suite entry point: one module per paper table/figure, plus the
+LM-framework roofline summary. Prints ``name,us_per_call,derived`` CSV rows
+interleaved with commentary lines (prefixed '#').
+"""
+from __future__ import annotations
+
+import traceback
+
+from . import (activity_reduction, bic_variants, fig2_distributions,
+               fig45_per_layer, overall_savings, overhead_scaling,
+               power_monitor_lm)
+
+SUITES = [
+    ("fig2_distributions", fig2_distributions.main),
+    ("bic_variants", bic_variants.main),
+    ("fig45_per_layer", fig45_per_layer.main),
+    ("overall_savings", overall_savings.main),
+    ("overhead_scaling", overhead_scaling.main),
+    ("activity_reduction", activity_reduction.main),
+    ("power_monitor_lm", power_monitor_lm.main),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, fn in SUITES:
+        print(f"# ===== {name} =====")
+        try:
+            fn()
+        except Exception:                                # noqa: BLE001
+            print(f"# {name} FAILED:")
+            traceback.print_exc()
+    # roofline summary appended if dry-run results exist
+    try:
+        from repro.launch import roofline
+        print("# ===== roofline (from dry-run cache) =====")
+        roofline.print_summary()
+    except Exception:                                    # noqa: BLE001
+        print("# roofline summary unavailable (run repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

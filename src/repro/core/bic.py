@@ -1,0 +1,142 @@
+"""Bus-Invert Coding (BIC) over streaming buses.
+
+Implements Stan/Burleson bus-invert coding [16] and the segmented variant
+[17] used by the paper: each bus *segment* (e.g. the bf16 mantissa field) is
+encoded independently. The encoder compares the incoming word against the
+*currently transmitted* (encoded) bus value; if the Hamming distance inside a
+segment exceeds half the segment width, that segment is transmitted inverted
+and the segment's ``inv`` line is raised.
+
+The recurrence is inherently sequential along the streaming axis, so the
+encoder is a ``lax.scan``; all lane dimensions are vectorized. A Pallas TPU
+kernel with the same semantics lives in ``repro.kernels.bic_encode``.
+
+Conventions
+-----------
+* Streams are ``uint16`` arrays of shape ``[T, *lanes]`` (T = streaming axis,
+  i.e. cycles). Use :func:`repro.core.bits.to_bits` to bitcast bf16 data.
+* The bus is assumed to start at ``init`` (default: zeros) with all ``inv``
+  lines low. The first transmitted word is encoded against that state, and
+  the ``init -> tx[0]`` edge is counted as a transition (negligible for long
+  streams; matches a bus that idles at a known state between tiles).
+* Ties (distance == width/2) are NOT inverted, per the original BIC paper.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import bits as B
+
+Segments = Sequence[int]
+
+#: The paper's selected configuration: BIC on the weight mantissa field only.
+MANTISSA_ONLY: tuple[int, ...] = (int(B.MANT_MASK),)
+FULL_BUS: tuple[int, ...] = (0xFFFF,)
+EXPONENT_ONLY: tuple[int, ...] = (int(B.EXP_MASK),)
+#: Segmented BIC over {mantissa, exponent} independently.
+MANT_EXP: tuple[int, ...] = (int(B.MANT_MASK), int(B.EXP_MASK))
+
+
+def _check_segments(segments: Segments) -> tuple[int, ...]:
+    segs = tuple(int(s) & 0xFFFF for s in segments)
+    if not segs:
+        raise ValueError("need at least one segment mask")
+    for i, a in enumerate(segs):
+        if a == 0:
+            raise ValueError("empty segment mask")
+        for b in segs[i + 1:]:
+            if a & b:
+                raise ValueError(f"overlapping segment masks {a:#x} and {b:#x}")
+    return segs
+
+
+@partial(jax.jit, static_argnames=("segments",))
+def bic_encode(stream: jax.Array, segments: Segments = MANTISSA_ONLY,
+               init: jax.Array | None = None):
+    """Encode a uint16 stream with (segmented) bus-invert coding.
+
+    Args:
+      stream: ``uint16[T, *lanes]`` words in transmission order.
+      segments: disjoint bit masks; each is encoded independently.
+      init: initial bus state ``uint16[*lanes]`` (default zeros).
+
+    Returns:
+      ``(tx, inv)`` where ``tx`` is the encoded ``uint16[T, *lanes]`` stream
+      (bits outside all segments pass through unmodified) and ``inv`` is
+      ``bool[T, S, *lanes]`` with one invert line per segment.
+    """
+    segs = _check_segments(segments)
+    stream = stream.astype(jnp.uint16)
+    lanes = stream.shape[1:]
+    if init is None:
+        init = jnp.zeros(lanes, jnp.uint16)
+    widths = jnp.array([B.segment_width(s) for s in segs], jnp.int32)
+    masks = jnp.array(segs, jnp.uint16)
+
+    def step(prev_tx, x):
+        # prev_tx: uint16[*lanes]; x: uint16[*lanes]
+        tx = x
+        invs = []
+        for si, m in enumerate(segs):
+            mask = masks[si]
+            dist = B.hamming(x, prev_tx, mask)
+            # strict majority: invert iff dist > width/2 (ties keep data)
+            inv = dist * 2 > widths[si]
+            tx = jnp.where(inv, tx ^ mask, tx)
+            invs.append(inv)
+        return tx, (tx, jnp.stack(invs, axis=0))
+
+    _, (tx, inv) = jax.lax.scan(step, init, stream)
+    return tx, inv
+
+
+@partial(jax.jit, static_argnames=("segments",))
+def bic_decode(tx: jax.Array, inv: jax.Array, segments: Segments = MANTISSA_ONLY):
+    """Invert :func:`bic_encode`: ``uint16[T, *lanes]`` original stream."""
+    segs = _check_segments(segments)
+    out = tx.astype(jnp.uint16)
+    for si, m in enumerate(segs):
+        out = jnp.where(inv[:, si], out ^ jnp.uint16(m), out)
+    return out
+
+
+@partial(jax.jit, static_argnames=("segments", "include_inv_lines"))
+def bic_transitions(stream: jax.Array, segments: Segments = MANTISSA_ONLY,
+                    init: jax.Array | None = None,
+                    include_inv_lines: bool = True) -> jax.Array:
+    """Per-lane bus transition counts after BIC encoding.
+
+    Counts toggles of every data bit of the encoded bus plus (optionally) the
+    per-segment ``inv`` lines, including the ``init -> tx[0]`` edge.
+
+    Returns ``int32[*lanes]``.
+    """
+    segs = _check_segments(segments)
+    stream = stream.astype(jnp.uint16)
+    lanes = stream.shape[1:]
+    if init is None:
+        init = jnp.zeros(lanes, jnp.uint16)
+    tx, inv = bic_encode(stream, segs, init)
+    prev = jnp.concatenate([init[None], tx[:-1]], axis=0)
+    data_t = B.hamming(tx, prev).sum(axis=0)
+    if not include_inv_lines:
+        return data_t
+    inv_i = inv.astype(jnp.int32)
+    prev_inv = jnp.concatenate([jnp.zeros_like(inv_i[:1]), inv_i[:-1]], axis=0)
+    inv_t = jnp.abs(inv_i - prev_inv).sum(axis=(0, 1))
+    return data_t + inv_t
+
+
+def encode_weight_mantissas(w: jax.Array):
+    """Paper configuration: BIC-encode the mantissa field of bf16 weights.
+
+    Args:
+      w: bf16 weights ``[K, N]`` in streaming order (K = streaming axis).
+    Returns:
+      ``(tx_bits, inv)`` — encoded uint16 stream and ``bool[K, 1, N]`` inv line.
+    """
+    return bic_encode(B.to_bits(w), MANTISSA_ONLY)

@@ -1,0 +1,74 @@
+"""Bit-level utilities for Bfloat16 streams.
+
+Bfloat16 layout (MSB..LSB):  [sign:1][exponent:8][mantissa:7]
+  bit index:                  15     14..7        6..0
+
+All stream-level functions in :mod:`repro.core` operate on ``uint16`` words
+obtained via :func:`to_bits`, so the same machinery also works for int16 /
+fp16 buses by supplying a different segment mask.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BF16_BITS = 16
+SIGN_SHIFT = 15
+EXP_SHIFT = 7
+SIGN_MASK = jnp.uint16(0x8000)
+EXP_MASK = jnp.uint16(0x7F80)
+MANT_MASK = jnp.uint16(0x007F)
+FULL_MASK = jnp.uint16(0xFFFF)
+EXP_BIAS = 127
+
+#: Named bus segments used by segmented bus-invert coding.
+SEGMENTS: dict[str, int] = {
+    "full": 0xFFFF,
+    "sign": 0x8000,
+    "exponent": 0x7F80,
+    "mantissa": 0x007F,
+    "sign_mantissa": 0x807F,
+    "exp_mantissa": 0x7FFF,
+}
+
+
+def to_bits(x: jax.Array) -> jax.Array:
+    """Bitcast a bfloat16 array to uint16 words (same shape)."""
+    if x.dtype != jnp.bfloat16:
+        x = x.astype(jnp.bfloat16)
+    return jax.lax.bitcast_convert_type(x, jnp.uint16)
+
+
+def from_bits(u: jax.Array) -> jax.Array:
+    """Bitcast uint16 words back to bfloat16."""
+    return jax.lax.bitcast_convert_type(u.astype(jnp.uint16), jnp.bfloat16)
+
+
+def exponent_field(u: jax.Array) -> jax.Array:
+    """Raw (biased) 8-bit exponent field of each word."""
+    return ((u & EXP_MASK) >> EXP_SHIFT).astype(jnp.int32)
+
+
+def mantissa_field(u: jax.Array) -> jax.Array:
+    """7-bit mantissa field of each word."""
+    return (u & MANT_MASK).astype(jnp.int32)
+
+
+def sign_field(u: jax.Array) -> jax.Array:
+    return ((u & SIGN_MASK) >> SIGN_SHIFT).astype(jnp.int32)
+
+
+def popcount(u: jax.Array) -> jax.Array:
+    """Per-element population count, as int32."""
+    return jax.lax.population_count(u.astype(jnp.uint16)).astype(jnp.int32)
+
+
+def hamming(a: jax.Array, b: jax.Array, mask: int | jax.Array = 0xFFFF) -> jax.Array:
+    """Per-element Hamming distance between two uint16 arrays under ``mask``."""
+    m = jnp.uint16(mask) if not isinstance(mask, jax.Array) else mask.astype(jnp.uint16)
+    return popcount((a.astype(jnp.uint16) ^ b.astype(jnp.uint16)) & m)
+
+
+def segment_width(mask: int) -> int:
+    """Number of bits selected by a segment mask (static python int)."""
+    return int(bin(int(mask) & 0xFFFF).count("1"))

@@ -1,0 +1,177 @@
+"""Calibrated dynamic-power model for the systolic array.
+
+The paper reports post-synthesis (PowerPro, 45 nm) dynamic power. We have no
+RTL flow, so power is an explicit analytic model over the exact activity
+counters of :mod:`repro.core.systolic`:
+
+    E_total = E_streaming + E_clock + E_compute + E_accumulate + E_unload
+              (+ E_overhead for the proposed design's new logic)
+
+Energy constants are in femtojoules, 45 nm-flavoured. Provenance:
+
+* Multiplier/adder energies start from the Horowitz ISSCC'14 45 nm table
+  (fp16 mult ~1.1 pJ, fp16 add ~0.4 pJ); bf16 has a smaller mantissa
+  multiplier, so E_MULT = 900 fJ, E_ADD = 350 fJ.
+* Register/wire/clock energies are per-bit-toggle estimates for a 45 nm
+  standard-cell flow. ``E_WIRE_BIT`` (inter-PE wire + repeater) is the single
+  constant CALIBRATED so that the *baseline* SA spends ~31% of its dynamic
+  power on data/weight streaming with random operands -- the split implied by
+  the paper (29% streaming-activity reduction -> 9.4% total power reduction).
+  Calibration is against ResNet50 aggregate only; MobileNet's 6.2% is then a
+  prediction, not a fit (see EXPERIMENTS.md C5).
+
+The model charges, per design (baseline vs proposed):
+  streaming   : (h + v pipeline toggles) x (E_REG_BIT + E_WIRE_BIT)
+  clock       : per-flop-bit clock pin energy on every *ungated* cycle
+  multiplier  : static share per active slot + dynamic share scaled by
+                operand toggle density (captures the paper's note that runs
+                of zeros also help the *conventional* SA)
+  adder       : static share per active slot + full op on non-zero slots
+  accumulator : register toggles on non-zero product slots
+  unload      : result shift-out toggles
+  overheads   : zero-detectors, BIC encoders, per-PE decode XORs, is-zero
+                line (proposed design only)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """Per-event energies in fJ (45 nm-flavoured)."""
+    E_REG_BIT: float = 6.0        # flip-flop data toggle
+    E_WIRE_BIT: float = 18.0      # inter-PE wire toggle (CALIBRATED, see above)
+    E_CLK_BIT: float = 1.8        # clock pin per flop-bit per ungated cycle
+    E_MULT: float = 450.0         # bf16 multiply (8x8 mantissa) at random activity
+    # Combinational datapaths have (almost) no operand-independent dynamic
+    # power -- a multiplier whose input operand is held at zero is already
+    # quiet in the BASELINE (all partial products zero). The small static
+    # fractions model residual glitching/control switching only; the real
+    # ZVG compute-side win is the gated clock load (E_CLK_BIT).
+    E_ADD: float = 400.0          # accumulate add (align + add + normalise)
+    MULT_STATIC_FRAC: float = 0.01  # operand-independent share of E_MULT
+    MULT_PP_FRAC: float = 0.80      # partial-product-array share of mult dyn
+    ADD_STATIC_FRAC: float = 0.01
+    ACC_TOGGLE_BITS: float = 12.8   # mean acc-register bits toggled per update
+    UNLOAD_TOGGLE_BITS: float = 12.8
+    REG_BITS_PER_PE: float = 72.0   # a(16) + b(16) + acc(32) + ctrl(8)
+    GATEABLE_BITS_PER_PE: float = 42.0  # a-reg + acc + operand latch + ctrl
+    E_ZDET: float = 8.0           # 16-bit zero comparator, per word
+    E_ENC: float = 60.0           # mantissa BIC encoder, per word
+    E_DEC_XOR_BIT: float = 0.8    # per decoded-bit toggle at each PE
+    MANT_FRAC: float = 7.0 / 16.0  # mantissa share of weight-bus toggles
+    # Un-gateable baseline loads (cap the achievable savings, per real flows):
+    E_CTRL_CYCLE: float = 160.0    # sequencing/mux control per PE per cycle
+    CLK_LEAF_FRAC: float = 0.18   # share of clock power at gateable leaf pins
+
+    @property
+    def E_STREAM_BIT(self) -> float:
+        return self.E_REG_BIT + self.E_WIRE_BIT
+
+
+DEFAULT_ENERGY = EnergyModel()
+
+
+def _mult_energy(em: EnergyModel, slots, tog_a, tog_b, mtog_a, mtog_b):
+    """Multiplier energy: static share + toggle-scaled dynamic.
+
+    The bf16 multiplier's energy is dominated by the 8x8 partial-product
+    array, whose switching tracks *mantissa-field* toggles; the small
+    exponent adder / sign path tracks full-word toggles. Dynamic shares are
+    normalised so random bf16 operands (~3.5+3.5 mantissa, ~8+8 full-word
+    toggled bits per cycle) give exactly E_MULT per slot.
+    """
+    static = em.MULT_STATIC_FRAC * em.E_MULT * slots
+    dyn_budget = (1.0 - em.MULT_STATIC_FRAC) * em.E_MULT
+    pp = em.MULT_PP_FRAC * dyn_budget * (mtog_a + mtog_b) / 7.0
+    exp = (1.0 - em.MULT_PP_FRAC) * dyn_budget * (tog_a + tog_b) / 16.0
+    return static + pp + exp
+
+
+def sa_power(report: dict, em: EnergyModel = DEFAULT_ENERGY) -> dict:
+    """Dynamic energy (fJ) breakdown for baseline and proposed designs.
+
+    Args:
+      report: output of :func:`repro.core.systolic.sa_stream_report`.
+    Returns:
+      dict with per-component energies, totals, mean power (fJ/cycle), and
+      the headline relative savings.
+    """
+    cyc = jnp.maximum(report["cycles"], 1.0)
+    n_pe = report["rows"] * report["cols"]
+    pe_slots = report["pe_slots"]
+    gated = report["gated_slots"]
+    nonzero = report["nonzero_slots"]
+
+    # ---------------- baseline (no power-saving features) ----------------
+    base = {}
+    base["streaming"] = em.E_STREAM_BIT * (
+        report["h_reg_toggles_base"] + report["v_reg_toggles_base"])
+    base["clock"] = em.E_CLK_BIT * em.REG_BITS_PER_PE * n_pe * cyc
+    base["control"] = em.E_CTRL_CYCLE * n_pe * cyc
+    base["mult"] = _mult_energy(
+        em, pe_slots,
+        report["mult_a_toggles_base"], report["mult_b_toggles_base"],
+        report["mult_a_mant_toggles_base"], report["mult_b_mant_toggles"])
+    base["add"] = em.E_ADD * (
+        em.ADD_STATIC_FRAC * pe_slots + (1 - em.ADD_STATIC_FRAC) * nonzero)
+    base["acc"] = em.E_REG_BIT * em.ACC_TOGGLE_BITS * nonzero
+    base["unload"] = (em.E_STREAM_BIT * em.UNLOAD_TOGGLE_BITS
+                      * report["unload_reg_traversals"])
+    base["total"] = sum(base.values())
+
+    # ---------------- proposed (BIC on weights + ZVG on inputs) ----------
+    prop = {}
+    prop["streaming"] = em.E_STREAM_BIT * (
+        report["h_reg_toggles_prop"] + report["v_reg_toggles_prop"])
+    # gated slots drop the LEAF share of the gateable flops' clock load
+    # (the clock distribution tree itself keeps toggling)
+    clk_full = em.E_CLK_BIT * em.REG_BITS_PER_PE * n_pe * cyc
+    clk_saved = (em.E_CLK_BIT * em.GATEABLE_BITS_PER_PE
+                 * em.CLK_LEAF_FRAC * gated)
+    prop["clock"] = clk_full - clk_saved
+    prop["control"] = base["control"]  # sequencing logic is not gated
+    prop["mult"] = _mult_energy(
+        em, pe_slots - gated,
+        report["mult_a_toggles_prop"], report["mult_b_toggles_prop"],
+        report["mult_a_mant_toggles_prop"], report["mult_b_mant_toggles"])
+    prop["add"] = em.E_ADD * (
+        em.ADD_STATIC_FRAC * (pe_slots - gated)
+        + (1 - em.ADD_STATIC_FRAC) * nonzero)
+    prop["acc"] = base["acc"]          # same non-zero updates
+    prop["unload"] = base["unload"]    # same dense results
+    prop["overhead"] = (
+        em.E_ZDET * report["zdet_words"]
+        + em.E_ENC * report["enc_words"]
+        + em.E_DEC_XOR_BIT * em.MANT_FRAC * report["mult_b_toggles_prop"])
+    prop["total"] = sum(prop.values())
+
+    saving = 1.0 - prop["total"] / jnp.maximum(base["total"], 1.0)
+    stream_saving = 1.0 - prop["streaming"] / jnp.maximum(base["streaming"], 1.0)
+    return {
+        "baseline": base,
+        "proposed": prop,
+        "power_base": base["total"] / cyc,
+        "power_prop": prop["total"] / cyc,
+        "saving_total": saving,
+        "saving_streaming": stream_saving,
+        "streaming_share_base": base["streaming"] / base["total"],
+    }
+
+
+def aggregate_savings(power_reports: list[dict]) -> dict:
+    """Network-level aggregation (energy-weighted, like the paper's overall
+    numbers): sums per-layer energies before taking the ratio."""
+    tb = sum(float(p["baseline"]["total"]) for p in power_reports)
+    tp = sum(float(p["proposed"]["total"]) for p in power_reports)
+    sb = sum(float(p["baseline"]["streaming"]) for p in power_reports)
+    sp = sum(float(p["proposed"]["streaming"]) for p in power_reports)
+    return {
+        "total_saving": 1.0 - tp / max(tb, 1.0),
+        "streaming_saving": 1.0 - sp / max(sb, 1.0),
+        "streaming_share": sb / max(tb, 1.0),
+    }

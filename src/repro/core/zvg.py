@@ -1,0 +1,83 @@
+"""Zero-Value clock Gating (ZVG) stream accounting.
+
+When an input value is zero, the proposed SA freezes the horizontal pipeline
+register (clock gating), raises an ``is-zero`` line that travels with the
+bubble, and data-gates the multiplier/accumulator of every PE the bubble
+reaches. For switching-activity purposes this means:
+
+* the gated register's contents hold, so the effective toggle sequence of the
+  register is the *zero-compressed* stream (transitions between consecutive
+  non-zero values only);
+* the 1-bit ``is-zero`` line itself toggles at zero-run boundaries;
+* multiplications/additions in gated cycles are skipped entirely.
+
+Zero detection treats +0.0 and -0.0 as zero (bits & 0x7FFF == 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import bits as B
+
+NOT_SIGN = jnp.uint16(0x7FFF)
+
+
+def is_zero(bits: jax.Array) -> jax.Array:
+    """Per-word zero flag (ignores the sign bit, so -0.0 counts as zero)."""
+    return (bits.astype(jnp.uint16) & NOT_SIGN) == 0
+
+
+@jax.jit
+def zvg_stream_report(stream: jax.Array, init: jax.Array | None = None):
+    """Activity accounting of a zero-gated input stream.
+
+    Args:
+      stream: ``uint16[T, *lanes]`` bitcast bf16 input stream.
+      init: initial register state (default zeros).
+
+    Returns dict with per-lane ``int32[*lanes]`` counters:
+      ``transitions``        register/wire bit toggles with gating applied
+      ``transitions_raw``    toggles of the ungated stream (baseline design)
+      ``transitions_mant``   mantissa-field-only gated toggles (multiplier
+                             partial-product-array switching proxy)
+      ``transitions_mant_raw``  ungated mantissa-field toggles
+      ``iszero_toggles``     toggles of the 1-bit is-zero line
+      ``zeros``              gated (skipped) cycle count
+    """
+    stream = stream.astype(jnp.uint16)
+    lanes = stream.shape[1:]
+    if init is None:
+        init = jnp.zeros(lanes, jnp.uint16)
+
+    z = is_zero(stream)
+
+    def step(carry, xz):
+        held, prev_z = carry
+        x, zt = xz
+        nxt = jnp.where(zt, held, x)
+        t = B.hamming(nxt, held)
+        tm = B.hamming(nxt, held, B.MANT_MASK)
+        iz = (zt ^ prev_z).astype(jnp.int32)
+        return (nxt, zt), (t, tm, iz)
+
+    (_, _), (trans, trans_m, iz) = jax.lax.scan(
+        step, (init, jnp.zeros(lanes, bool)), (stream, z))
+
+    prev_raw = jnp.concatenate([init[None], stream[:-1]], axis=0)
+    raw = B.hamming(stream, prev_raw).sum(axis=0)
+    raw_m = B.hamming(stream, prev_raw, B.MANT_MASK).sum(axis=0)
+
+    return {
+        "transitions": trans.sum(axis=0),
+        "transitions_raw": raw,
+        "transitions_mant": trans_m.sum(axis=0),
+        "transitions_mant_raw": raw_m,
+        "iszero_toggles": iz.sum(axis=0),
+        "zeros": z.astype(jnp.int32).sum(axis=0),
+    }
+
+
+def zero_fraction(x: jax.Array) -> jax.Array:
+    """Fraction of exactly-zero elements of a (bf16-castable) tensor."""
+    return jnp.mean(is_zero(B.to_bits(x)).astype(jnp.float32))

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLM, TokenFileSource, make_source  # noqa: F401

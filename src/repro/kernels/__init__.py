@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel directory contains ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jitted public wrapper) and ``ref.py`` (pure-jnp oracle used by
+the allclose tests). Kernels are validated with ``interpret=True`` on CPU;
+on TPU hardware pass ``interpret=False`` for the Mosaic lowering.
+"""
+from .bic_encode.ops import bic_encode  # noqa: F401
+from .transitions.ops import count_transitions  # noqa: F401
+from .zvg_matmul.ops import zvg_matmul  # noqa: F401

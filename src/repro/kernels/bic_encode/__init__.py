@@ -1,0 +1,2 @@
+from .ops import *  # noqa: F401,F403
+from . import kernel, ops, ref  # noqa: F401

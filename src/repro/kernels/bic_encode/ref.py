@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the BIC encoder kernel (single segment).
+
+Delegates to the sequential ``lax.scan`` encoder in :mod:`repro.core.bic`,
+which is itself property-tested against a pure-python reference.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import bic
+
+
+def bic_encode_ref(x: jax.Array, mask: int):
+    """Encode ``uint16[T, L]`` with single-segment BIC.
+
+    Returns ``(tx: uint16[T, L], inv: bool[T, L])``.
+    """
+    tx, inv = bic.bic_encode(x, (int(mask),))
+    return tx, inv[:, 0]

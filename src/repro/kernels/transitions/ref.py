@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the stream-transition counter kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def transitions_ref(x: jax.Array, mask: int = 0xFFFF,
+                    init: jax.Array | None = None) -> jax.Array:
+    """Per-lane bit-transition counts of a uint16 stream.
+
+    Args:
+      x: ``uint16[T, L]``.
+      mask: bus bits to count.
+      init: initial bus state ``uint16[L]`` (default zeros); the init->x[0]
+        edge is counted.
+    Returns:
+      ``int32[L]``.
+    """
+    x = x.astype(jnp.uint16)
+    if init is None:
+        init = jnp.zeros(x.shape[1:], jnp.uint16)
+    prev = jnp.concatenate([init[None], x[:-1]], axis=0)
+    diff = (x ^ prev) & jnp.uint16(mask)
+    return jax.lax.population_count(diff).astype(jnp.int32).sum(axis=0)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the zero-gated output-stationary matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zvg_matmul_ref(a: jax.Array, b: jax.Array,
+                   block_m: int = 128, block_k: int = 128):
+    """Reference matmul + gating statistics.
+
+    Returns:
+      out: ``f32[M, N]`` = a @ b (zero blocks contribute exactly zero, so the
+        gated product is numerically identical to the dense product).
+      gated: ``int32[M/block_m, K/block_k]`` -- 1 where the A block is
+        entirely zero (the kernel skips these MXU passes).
+    """
+    M, K = a.shape
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    am = jnp.pad(a, ((0, (-M) % block_m), (0, (-K) % block_k)))
+    Mb = am.shape[0] // block_m
+    Kb = am.shape[1] // block_k
+    blocks = am.reshape(Mb, block_m, Kb, block_k)
+    gated = (jnp.abs(blocks).max(axis=(1, 3)) == 0).astype(jnp.int32)
+    return out, gated

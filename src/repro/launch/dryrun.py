@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagates, no unsupported collectives, memory fits) and extracts the
+numbers the roofline analysis consumes:
+
+  * compiled.memory_analysis()  -- per-chip argument/output/temp bytes
+  * compiled.cost_analysis()    -- raw XLA flops (scan bodies counted once;
+                                   recorded for reference only)
+  * hlo_analysis.analyze()      -- loop-trip-corrected per-chip collective
+                                   bytes by kind AND exact dot FLOPs
+  * launch.flops.model_flops()  -- analytic MODEL_FLOPS cross-check
+
+Results are cached as JSON per cell under results/dryrun/ so the sweep is
+resumable; EXPERIMENTS.md tables are generated from these files by
+launch/roofline.py.
+
+NOTE: the XLA_FLAGS line above must run before ANY jax import -- keep it
+the first statement of this module.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, applicable, get_config, input_specs
+from repro.launch import flops as F
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim import AdamW
+from repro.runtime import sharding as sh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _eval_params(cfg, serve: bool = False):
+    params = jax.eval_shape(lambda: lm.init_model(jax.random.key(0), cfg))
+    if serve:
+        # inference holds bf16 weights (no optimizer/master copies)
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32
+                else s.dtype), params)
+    return params
+
+
+def build_cell(cfg, shape, mesh):
+    """Returns (jitted_fn, example_args as SDS trees)."""
+    constrain = sh.make_constrain(mesh)
+    serve = shape.kind == "decode"
+    params = _eval_params(cfg, serve=serve)
+    # serving reuses weights every step without optimizer state: TP-only
+    # bf16 sharding (replicated over data) removes per-step FSDP gathers
+    pshard = sh.param_shardings(mesh, params, serve=serve)
+    batch = input_specs(cfg, shape)
+    bshard = sh.batch_shardings(mesh, batch)
+
+    if shape.kind == "train":
+        opt = AdamW()
+        opt_state = jax.eval_shape(opt.init, params)
+        oshard = sh.opt_state_shardings(mesh, params, opt_state)
+        step = lm.make_train_step(cfg, opt, constrain=constrain)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard, None),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        args = (params, opt_state, batch, jax.ShapeDtypeStruct((), jnp.int32))
+        return fn, args
+    if shape.kind == "prefill":
+        step = lm.make_prefill_step(cfg, cache_len=shape.seq_len,
+                                    constrain=constrain)
+        states = jax.eval_shape(
+            lambda p, b: step(p, b)[1], params, batch)
+        sshard = sh.tree_shardings(mesh, states)
+        fn = jax.jit(step, in_shardings=(pshard, bshard),
+                     out_shardings=(None, sshard))
+        return fn, (params, batch)
+    # decode
+    step = lm.make_decode_step(cfg, constrain=constrain)
+    states = jax.eval_shape(
+        lambda: lm.make_decode_state(cfg, shape.global_batch,
+                                     shape.seq_len))
+    sshard = sh.tree_shardings(mesh, states)
+    fn = jax.jit(step, in_shardings=(pshard, sshard, bshard),
+                 out_shardings=(None, sshard), donate_argnums=(1,))
+    return fn, (params, states, batch)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force: bool = False) -> dict:
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "kind": shape.kind}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _write(path, rec)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = mesh.devices.size
+        fn, args = build_cell(cfg, shape, mesh)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        hlo = H.analyze(text)
+        mf = F.model_flops(cfg, shape.seq_len, shape.global_batch,
+                           shape.kind)
+        rec.update(
+            status="ok",
+            n_chips=n_chips,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_bytes_per_chip": (mem.argument_size_in_bytes
+                                        + mem.output_size_in_bytes
+                                        + mem.temp_size_in_bytes
+                                        - mem.alias_size_in_bytes),
+            },
+            xla_cost_raw={k: cost.get(k) for k in
+                          ("flops", "bytes accessed")},
+            hlo={
+                "dot_flops_per_chip": hlo["dot_flops"],
+                "mem_bytes_per_chip": hlo.get("mem_bytes", 0.0),
+                "collective_bytes_per_chip": hlo["total"],
+                "collectives_per_kind": {k: v for k, v in
+                                         hlo["per_kind"].items()
+                                         if k != "flops"},
+                "collective_op_sites": hlo["ops"],
+                "loops": hlo["loops"][:20],
+            },
+            model_flops=mf,
+        )
+    except Exception as e:                               # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    _write(path, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, args.force)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    gb = rec["memory"]["peak_bytes_per_chip"] / 2**30
+                    cf = rec["hlo"]["dot_flops_per_chip"]
+                    extra = (f"peak/chip={gb:.2f}GiB "
+                             f"dotF/chip={cf:.3e} "
+                             f"coll/chip={rec['hlo']['collective_bytes_per_chip']/2**20:.1f}MiB "
+                             f"[{rec['wall_s']}s]")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                else:
+                    extra = rec.get("reason", "")[:80]
+                print(f"{arch:24s} {shape:12s} "
+                      f"{'2x16x16' if mp else '16x16':8s} {status:8s} "
+                      f"{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

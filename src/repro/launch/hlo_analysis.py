@@ -1,0 +1,266 @@
+"""Static analysis of compiled (post-SPMD) HLO text.
+
+Extracts per-collective byte counts with *loop-trip correction*: XLA's
+cost analysis counts a ``while`` body once, but our layer stacks (and
+attention/CE chunk loops) are scans. We therefore:
+
+  1. split the HLO module into computations,
+  2. record every collective op (all-reduce / all-gather / reduce-scatter /
+     all-to-all / collective-permute, including -start forms) with the byte
+     size of its result shape,
+  3. recursively expand ``while`` ops, multiplying the body's contribution
+     by the loop trip count recovered from the condition computation's
+     comparison constant (scan-lowered loops compare a counter against a
+     literal),
+  4. expand ``call``/conditional-style references once.
+
+Shapes in post-SPMD HLO are per-device, so totals here are bytes PER CHIP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of a result type like 'bf16[8,128]{1,0}' or a tuple of them."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    collectives: list          # (kind, bytes)
+    whiles: list               # (cond_name, body_name)
+    calls: list                # called computation names (control flow)
+    fusion_calls: list = dataclasses.field(default_factory=list)
+    dot_flops: float = 0.0     # 2 * result_elems * contraction_size summed
+    mem_bytes: float = 0.0     # HBM traffic proxy: op result+operand bytes
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|conditional)\(.*?\).*?to_apply=%?([\w.\-]+)")
+_FUSION_RE = re.compile(r"fusion\(.*?\).*?calls=%?([\w.\-]+)")
+# ops that are layout/control only -- no HBM traffic of their own
+_FREE_OPS = ("tuple(", "get-tuple-element(", "parameter(", "constant(",
+             "bitcast(", "after-all(", "partition-id(", "iota(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DEF_RE = re.compile(r"^%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+))")
+_DOT_RE = re.compile(r"=\s*(\S+)\s+dot\(([^)]*)\)")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*([\w\[\],{}]+)")
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    defs: dict[str, str] = {}
+    param_like: set[str] = set()
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = _COMP_HEADER.match(line) if not line.startswith(" ") else None
+        if header and ("{" in line or stripped.endswith("{")):
+            cur = Computation(header.group(1), [], [], [])
+            comps[cur.name] = cur
+            defs = {}
+            param_like = set()
+            for pm in _PARAM_RE.finditer(header.group(2)):
+                defs[pm.group(1)] = pm.group(2)
+                param_like.add(pm.group(1))
+            continue
+        if cur is None:
+            continue
+        if stripped.startswith("}"):
+            continue
+        dm = _DEF_RE.match(stripped)
+        if dm:
+            defs[dm.group(1)] = dm.group(2)
+            # track zero-cost aliases of computation parameters: reading
+            # them IS an HBM read (carried weights/caches), while locally
+            # produced intermediates are only counted once (at production)
+            if ("get-tuple-element(" in stripped
+                    or "bitcast(" in stripped):
+                src = re.search(r"\((%?[\w.\-]+)", stripped[dm.end():])
+                if src and src.group(1).lstrip("%") in param_like:
+                    param_like.add(dm.group(1))
+            # HBM-traffic proxy:
+            #   result bytes (every buffer written once when produced)
+            # + operand bytes only for parameter-aliases (external reads)
+            # dynamic-update-slice: in-place update -- count update operand
+            if not any(op in stripped for op in _FREE_OPS):
+                if "dynamic-update-slice(" in stripped:
+                    args = re.search(r"dynamic-update-slice\(([^)]*)\)",
+                                     stripped)
+                    b = 0
+                    if args:
+                        parts = args.group(1).split(",")
+                        if len(parts) >= 2:
+                            upd = parts[1].strip().lstrip("%")
+                            b = 2 * _shape_bytes(defs.get(upd, ""))
+                    cur.mem_bytes += b
+                else:
+                    b = _shape_bytes(dm.group(2))
+                    args = re.search(r"\(([^)]*)\)", stripped[dm.end():])
+                    if args:
+                        for opn in args.group(1).split(","):
+                            opn = opn.strip().lstrip("%")
+                            if opn in param_like and opn in defs:
+                                b += _shape_bytes(defs[opn])
+                    cur.mem_bytes += b
+        # collective op?
+        for kind in COLLECTIVES:
+            if (f"= {kind}" in stripped or f"{kind}-start" in stripped
+                    or f" {kind}(" in stripped):
+                m = re.match(r"%?[\w.\-]+\s*=\s*(.*?)\s*" + kind, stripped)
+                if m and (kind + "-done") not in stripped:
+                    cur.collectives.append((kind, _shape_bytes(m.group(1))))
+                break
+        # dot FLOPs: 2 * result_elems * contraction_size
+        dot = _DOT_RE.search(stripped)
+        if dot:
+            res_dims = _dims(dot.group(1))
+            res_elems = 1
+            for d in res_dims:
+                res_elems *= d
+            contr = 1
+            cdims = _CDIM_RE.search(stripped)
+            lhs_name = dot.group(2).split(",")[0].strip().lstrip("%")
+            lhs_shape = defs.get(lhs_name, "")
+            ldims = _dims(lhs_shape)
+            if cdims is not None and ldims:
+                for ci in cdims.group(1).split(","):
+                    if ci and int(ci) < len(ldims):
+                        contr *= ldims[int(ci)]
+            elif ldims:
+                contr = ldims[-1]
+            cur.dot_flops += 2.0 * res_elems * contr
+        wm = _WHILE_RE.search(stripped)
+        if wm and "= " in stripped:
+            cur.whiles.append((wm.group(1), wm.group(2)))
+        cm = _CALL_RE.search(stripped)
+        if cm:
+            cur.calls.append(cm.group(1))
+        fm = _FUSION_RE.search(stripped)
+        if fm:
+            cur.fusion_calls.append(fm.group(1))
+    return comps
+
+
+def trip_count(comps: dict[str, Computation], cond_name: str,
+               text: str) -> int:
+    """Trip count of a scan-lowered while: the comparison literal in the
+    condition computation (fallback 1 if not recoverable)."""
+    # grab the condition computation's text block
+    pat = re.compile(r"%?" + re.escape(cond_name)
+                     + r"\s*\([^)]*\)[^\{]*\{(.*?)\n\}", re.S)
+    m = pat.search(text)
+    if not m:
+        return 1
+    consts = [int(c) for c in _CONST_RE.findall(m.group(1))]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+def analyze(text: str) -> dict:
+    """Loop-trip-corrected per-chip collective bytes and dot FLOPs.
+
+    Returns {"per_kind": {kind: bytes}, "total": bytes, "ops": n,
+             "loops": [(body, trip)], "dot_flops": flops_per_chip}.
+    """
+    comps = parse_hlo(text)
+    trips: dict[str, int] = {}
+    loops = []
+
+    entry = next(iter(comps), None)
+    for name in comps:
+        if name.startswith("main") or name.startswith("entry"):
+            entry = name
+            break
+
+    # entry detection fallback: the computation not referenced by others
+    referenced = set()
+    for c in comps.values():
+        referenced.update(b for _, b in c.whiles)
+        referenced.update(cond for cond, _ in c.whiles)
+        referenced.update(c.calls)
+    roots = [n for n in comps if n not in referenced]
+    if entry not in roots and roots:
+        entry = roots[-1]
+
+    memo: dict[str, dict] = {}
+
+    def walk(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 50:
+            return {"flops": 0.0}
+        out: dict[str, float] = defaultdict(float)
+        out["flops"] = c.dot_flops
+        out["bytes"] = c.mem_bytes
+        for kind, b in c.collectives:
+            out[kind] += b
+        for cond, body in c.whiles:
+            t = trips.get(body)
+            if t is None:
+                t = trip_count(comps, cond, text)
+                trips[body] = t
+                loops.append((body, t))
+            sub = walk(body, depth + 1)
+            for k, v in sub.items():
+                out[k] += v * t
+        for callee in c.calls:
+            sub = walk(callee, depth + 1)
+            for k, v in sub.items():
+                out[k] += v
+        for callee in c.fusion_calls:
+            # fusion bodies execute on-chip: count their FLOPs, not bytes
+            sub = walk(callee, depth + 1)
+            out["flops"] += sub.get("flops", 0.0)
+        memo[name] = dict(out)
+        return memo[name]
+
+    res = walk(entry) if entry else {}
+    dot_flops = res.pop("flops", 0.0)
+    mem_bytes = res.pop("bytes", 0.0)
+    total = sum(res.values())
+    n_ops = sum(len(c.collectives) for c in comps.values())
+    return {"per_kind": dict(res), "total": total, "ops": n_ops,
+            "loops": loops, "dot_flops": dot_flops,
+            "mem_bytes": mem_bytes}
+
+
+# backwards-compatible alias
+def collective_bytes(text: str) -> dict:
+    return analyze(text)

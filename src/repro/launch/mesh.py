@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state -- the dry-run must set XLA_FLAGS before any
+device initialization.
+
+Mesh layout (TPU v5e pods):
+  single pod : (data=16, model=16)               = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)        = 512 chips
+The "pod" axis composes with "data" for batch/FSDP sharding (DCN-crossing
+collectives stay on the gradient/FSDP path); "model" carries TP/SP/EP and
+stays inside the pod's ICI domain.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int | None = None):
+    """A small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = model or 1
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

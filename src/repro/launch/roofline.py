@@ -1,0 +1,148 @@
+"""Roofline analysis over the dry-run cache.
+
+Per (arch x shape) cell on the single-pod mesh, derive the three terms:
+
+  compute term    = HLO_dot_FLOPs_per_chip / PEAK_FLOPS
+  memory term     = HLO_mem_bytes_per_chip / HBM_BW
+  collective term = collective_bytes_per_chip / ICI_BW
+
+(the per-chip forms -- dividing global quantities by the chip count -- per
+the spec formulas). All three come from the compiled SPMD HLO with
+loop-trip correction (launch/hlo_analysis.py). The bottleneck is the max
+term; the MFU bound is MODEL_FLOPS-based:
+
+  mfu_bound = (MODEL_FLOPS / chips / PEAK_FLOPS) / max(terms)
+
+and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs quantifies
+remat/masked-attention/dispatch overhead.
+
+Hardware constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def load_cells(pod: str = "pod1") -> list[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(os.path.abspath(RESULTS_DIR),
+                                           f"*__{pod}.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec["hlo"]
+    chips = rec["n_chips"]
+    t_comp = hlo["dot_flops_per_chip"] / PEAK_FLOPS
+    t_mem = hlo.get("mem_bytes_per_chip", 0.0) / HBM_BW
+    t_coll = hlo["collective_bytes_per_chip"] / ICI_BW
+    t_max = max(t_comp, t_mem, t_coll, 1e-12)
+    model_total = rec["model_flops"]["total"]
+    t_model = model_total / chips / PEAK_FLOPS
+    hlo_global = hlo["dot_flops_per_chip"] * chips
+    bottleneck = {t_comp: "compute", t_mem: "memory",
+                  t_coll: "collective"}[t_max]
+    return {
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "mfu_bound": t_model / t_max,
+        "useful_ratio": model_total / max(hlo_global, 1.0),
+        "model_flops": model_total,
+        "hlo_flops_global": hlo_global,
+        "peak_gib": rec["memory"]["peak_bytes_per_chip"] / 2**30,
+    }
+
+
+SUGGESTIONS = {
+    "collective": ("shrink TP/SP re-sharding traffic (fuse norm into "
+                   "attention shards, widen per-chip model dim, or trade "
+                   "model-axis for extra FSDP on small models)"),
+    "memory": ("cut HBM traffic: larger fusion windows, bf16 cache/"
+               "optimizer layouts, or quantized KV cache for decode"),
+    "compute": ("near roofline -- remove masked-attention overhead "
+                "(Pallas flash kernel halves score FLOPs) and raise "
+                "useful-compute ratio"),
+}
+
+
+def table(pod: str = "pod1") -> list[str]:
+    rows = []
+    head = (f"| {'arch':24s} | {'shape':11s} | {'comp s':>9s} | "
+            f"{'mem s':>9s} | {'coll s':>9s} | {'bound':10s} | "
+            f"{'MFU bound':>9s} | {'useful':>6s} | {'GiB/chip':>8s} |")
+    rows.append(head)
+    rows.append("|" + "-" * (len(head) - 2) + "|")
+    for rec in load_cells(pod):
+        t = terms(rec)
+        if t is None:
+            reason = rec.get("reason", rec.get("error", ""))[:40]
+            rows.append(f"| {rec['arch']:24s} | {rec['shape']:11s} | "
+                        f"{'--':>9s} | {'--':>9s} | {'--':>9s} | "
+                        f"{rec['status']:10s} | {'':>9s} | {'':>6s} | "
+                        f"{'':>8s} | {reason}")
+            continue
+        rows.append(
+            f"| {rec['arch']:24s} | {rec['shape']:11s} | "
+            f"{t['compute_s']:9.4f} | {t['memory_s']:9.4f} | "
+            f"{t['collective_s']:9.4f} | {t['bottleneck']:10s} | "
+            f"{t['mfu_bound']:9.3f} | {t['useful_ratio']:6.2f} | "
+            f"{t['peak_gib']:8.2f} |")
+    return rows
+
+
+def print_summary(pod: str = "pod1") -> None:
+    for r in table(pod):
+        print(r)
+    cells = [(rec, terms(rec)) for rec in load_cells(pod)]
+    ok = [(r, t) for r, t in cells if t]
+    if not ok:
+        return
+    worst = min(ok, key=lambda x: x[1]["mfu_bound"])
+    coll = max(ok, key=lambda x: x[1]["collective_s"]
+               / max(x[1]["compute_s"], 1e-12))
+    print(f"# worst MFU bound: {worst[0]['arch']}/{worst[0]['shape']} "
+          f"({worst[1]['mfu_bound']:.3f})")
+    print(f"# most collective-bound: {coll[0]['arch']}/{coll[0]['shape']}")
+
+
+def cell_report(arch: str, shape: str, pod: str = "pod1") -> str:
+    path = os.path.join(os.path.abspath(RESULTS_DIR),
+                        f"{arch}__{shape}__{pod}.json")
+    with open(path) as f:
+        rec = json.load(f)
+    t = terms(rec)
+    if t is None:
+        return f"{arch}/{shape}: {rec['status']}"
+    return (f"{arch}/{shape} [{rec['mesh']}]: "
+            f"compute {t['compute_s']*1e3:.2f} ms, "
+            f"memory {t['memory_s']*1e3:.2f} ms, "
+            f"collective {t['collective_s']*1e3:.2f} ms -> "
+            f"{t['bottleneck']}-bound; MFU bound {t['mfu_bound']:.3f}; "
+            f"useful ratio {t['useful_ratio']:.2f}. "
+            f"Next: {SUGGESTIONS[t['bottleneck']]}")
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pod", default="pod1", choices=["pod1", "pod2"])
+    args = ap.parse_args()
+    print_summary(args.pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .config import ArchConfig  # noqa: F401
+from . import attention, layers, lm, moe, recurrent, transformer, xlstm  # noqa: F401

@@ -1,0 +1,155 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) + temporal conv.
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                      (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (0 < a_t < 1)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the affine maps
+(h -> a*h + b compose associatively), giving O(log S) depth -- the
+TPU-native formulation of a sequential recurrence (same adaptation story as
+the BIC encoder kernel). Decode is the single-step recurrence with carried
+state. The recurrence is elementwise, so the channel dim shards cleanly on
+the TP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0           # 0 => model width
+    conv_width: int = 4
+    window: int = 2048           # sliding window of the companion attention
+
+
+def make_conv1d(key, d: int, width: int) -> dict:
+    return {
+        "w": L.Param(L.normal_init(key, (width, d), d ** -0.5),
+                     (None, "ff")),
+        "b": L.bias_param(d, "ff"),
+    }
+
+
+def apply_conv1d(p: dict, x: jax.Array) -> jax.Array:
+    """Causal depthwise temporal conv, x: [B, S, D]."""
+    w = p["w"].value.astype(x.dtype)                   # [W, D]
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out + p["b"].value.astype(x.dtype)
+
+
+def conv1d_decode(p: dict, buf: jax.Array, x_t: jax.Array):
+    """Single-step conv: buf [B, W-1, D] holds the previous inputs."""
+    w = p["w"].value.astype(x_t.dtype)
+    width = w.shape[0]
+    window = jnp.concatenate([buf, x_t[:, None]], axis=1)  # [B, W, D]
+    out = jnp.einsum("bwd,wd->bd", window, w) + p["b"].value.astype(x_t.dtype)
+    return out, window[:, 1:]
+
+
+def make_rglru(key, d: int) -> dict:
+    ks = jax.random.split(key, 3)
+    # Lambda init so that a^c in [0.9, 0.999] (Griffin appendix)
+    lam = jnp.log(jnp.expm1(
+        -jnp.log(jnp.linspace(0.9, 0.999, d)) / _C))
+    return {
+        "w_a": L.dense_param(ks[0], d, d, "ff", None, stddev=d ** -0.5),
+        "b_a": L.bias_param(d),
+        "w_x": L.dense_param(ks[1], d, d, "ff", None, stddev=d ** -0.5),
+        "b_x": L.bias_param(d),
+        "lambda": L.Param(lam, (None,)),
+    }
+
+
+def _gates(p: dict, x: jax.Array):
+    r = jax.nn.sigmoid(x @ p["w_a"].value.astype(x.dtype)
+                       + p["b_a"].value.astype(x.dtype))
+    i = jax.nn.sigmoid(x @ p["w_x"].value.astype(x.dtype)
+                       + p["b_x"].value.astype(x.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lambda"].value)
+             * r.astype(jnp.float32))                  # [B,S,D] f32
+    a = jnp.exp(log_a)
+    gated_x = (i * x).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def apply_rglru(p: dict, x: jax.Array, h0: jax.Array | None = None):
+    """Parallel RG-LRU over a sequence. x: [B, S, D] -> [B, S, D]."""
+    a, b = _gates(p, x)
+    if h0 is not None:
+        # fold the carried state into the first step: h1 = a1*h0 + b1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def compose(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(compose, (a, b), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_decode(p: dict, h: jax.Array, x_t: jax.Array):
+    """Single decode step. h: [B, D] f32 state; x_t: [B, D]."""
+    a, b = _gates(p, x_t[:, None])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+def make_recurrent_block(key, d: int, cfg: RGLRUConfig) -> dict:
+    """Griffin recurrent block: in-proj (x, gate) -> conv1d -> RG-LRU ->
+    gated out-proj."""
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 5)
+    return {
+        "in_x": L.dense_param(ks[0], d, w, "embed", "ff"),
+        "in_gate": L.dense_param(ks[1], d, w, "embed", "ff"),
+        "conv": make_conv1d(ks[2], w, cfg.conv_width),
+        "rglru": make_rglru(ks[3], w),
+        "out": L.dense_param(ks[4], w, d, "ff", "embed"),
+    }
+
+
+def apply_recurrent_block(p: dict, x: jax.Array, state=None,
+                          want_state: bool = False):
+    """x: [B, S, D]. state: None (training/prefill) or (conv_buf, h).
+
+    ``want_state=True`` (prefill) additionally returns the decode state:
+    the conv input tail and the final recurrence state.
+    """
+    gate = jax.nn.gelu(x @ p["in_gate"].value.astype(x.dtype))
+    u = x @ p["in_x"].value.astype(x.dtype)
+    if state is None:
+        uc = apply_conv1d(p["conv"], u)
+        y, h_last = apply_rglru(p["rglru"], uc)
+        out = (y * gate) @ p["out"].value.astype(x.dtype)
+        if not want_state:
+            return out, None
+        cw = p["conv"]["w"].value.shape[0]
+        buf = jnp.pad(u, ((0, 0), (max(cw - 1 - u.shape[1], 0), 0),
+                          (0, 0)))[:, -(cw - 1):]
+        return out, (buf, h_last)
+    conv_buf, h = state
+    u_t, conv_buf = conv1d_decode(p["conv"], conv_buf, u[:, 0])
+    y_t, h = rglru_decode(p["rglru"], h, u_t)
+    out = (y_t[:, None] * gate) @ p["out"].value.astype(x.dtype)
+    return out, (conv_buf, h)
+
+
+def recurrent_state_init(batch: int, width: int, conv_width: int,
+                         dtype=jnp.bfloat16):
+    return (jnp.zeros((batch, conv_width - 1, width), dtype),
+            jnp.zeros((batch, width), jnp.float32))

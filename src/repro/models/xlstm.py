@@ -1,0 +1,306 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM (Beck et al. 2024): per-head matrix memory C [dk, dv] with exponential
+input gates and sigmoid forget gates, stabilized in log space:
+
+    m_t = max(f~_t + m_{t-1}, i~_t)                 (stabilizer)
+    C_t = exp(f~_t + m_{t-1} - m_t) C_{t-1} + exp(i~_t - m_t) k_t v_t^T
+    n_t = exp(f~_t + m_{t-1} - m_t) n_{t-1} + exp(i~_t - m_t) k_t
+    h_t = C_t^T q_t / max(|n_t^T q_t|, 1)
+
+Two executions are provided and cross-validated in tests:
+  * ``recurrent``  -- exact per-step scan (oracle; O(S) sequential).
+  * ``chunkwise``  -- per-chunk parallel form: a scan over chunks carries
+    (C, n, m); within a chunk, contributions split into an inter-chunk term
+    (query against carried memory) and an intra-chunk masked-attention term,
+    both computed with dense einsums. This is the production/TPU form: its
+    sequential depth is S/chunk and all inner work is MXU-shaped.
+
+sLSTM: scalar-memory LSTM with exponential gating and a normalizer state;
+head-wise block-diagonal recurrence (per-head dense recurrent matrix). It is
+inherently sequential -- faithfully implemented as a per-step scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    heads: int = 4
+    chunk: int = 128
+    mlstm_proj_factor: float = 2.0   # up-projection of the mLSTM block
+    slstm_proj_factor: float = 4.0 / 3.0
+    conv_width: int = 4
+
+
+# ------------------------------------------------------------------ mLSTM
+def make_mlstm(key, d: int, cfg: XLSTMConfig) -> dict:
+    """mLSTM block: up-proj -> (q, k, v, gates) -> memory -> down-proj."""
+    di = int(d * cfg.mlstm_proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": L.dense_param(ks[0], d, di, "embed", "ff"),
+        "up_gate": L.dense_param(ks[1], d, di, "embed", "ff"),
+        "conv": _make_causal_conv(ks[2], di, cfg.conv_width),
+        # wq/wk row-parallel (full dk per chip, contraction all-reduce);
+        # wv column-parallel so v -- and through the outer products the
+        # matrix memory C [B,H,dk,dv] -- shards dv over the model axis:
+        # the dominant training state/traffic shrinks by the TP factor
+        # (§Perf cell C)
+        "wq": L.dense_param(ks[3], di, di, "ff", None),
+        "wk": L.dense_param(ks[4], di, di, "ff", None),
+        "wv": L.dense_param(ks[5], di, di, None, "heads_ff"),
+        "wi": L.dense_param(ks[6], di, cfg.heads, "ff", None),
+        "wf": L.dense_param(ks[7], di, cfg.heads, "ff", None),
+        "bi": L.bias_param(cfg.heads),
+        "bf": L.Param(jnp.linspace(3.0, 6.0, cfg.heads), (None,)),
+        "skip_scale": L.scale_param(di),
+        "norm": L.make_norm("rms", di),
+        "down": L.dense_param(
+            jax.random.fold_in(key, 99), di, d, "ff", "embed"),
+    }
+
+
+def _make_causal_conv(key, d, width):
+    return {"w": L.Param(L.normal_init(key, (width, d), d ** -0.5),
+                         (None, "ff")),
+            "b": L.bias_param(d, "ff")}
+
+
+def _causal_conv(p, x):
+    w = p["w"].value.astype(x.dtype)
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1]] * w[i]
+               for i in range(width)) + p["b"].value.astype(x.dtype)
+
+
+def _mlstm_qkvif(p: dict, u: jax.Array, heads: int):
+    """Project the up-stream into per-head q, k, v and gate pre-activations."""
+    b, s, di = u.shape
+    dh = di // heads
+    c = jax.nn.silu(_causal_conv(p["conv"], u))
+    q = (c @ p["wq"].value.astype(u.dtype)).reshape(b, s, heads, dh)
+    k = (c @ p["wk"].value.astype(u.dtype)).reshape(b, s, heads, dh)
+    k = k * (dh ** -0.5)
+    v = (u @ p["wv"].value.astype(u.dtype)).reshape(b, s, heads, dh)
+    i_pre = (c @ p["wi"].value.astype(u.dtype)
+             + p["bi"].value.astype(u.dtype)).astype(jnp.float32)
+    f_pre = (c @ p["wf"].value.astype(u.dtype)
+             + p["bf"].value.astype(u.dtype)).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre, c
+
+
+def mlstm_memory_recurrent(q, k, v, i_pre, f_pre, state=None):
+    """Exact per-step mLSTM memory. q/k/v: [B,S,H,D]; gates: [B,S,H].
+
+    Returns (h [B,S,H,D], final_state (C, n, m)).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        logf = jax.nn.log_sigmoid(ft)                   # [B,H]
+        m_new = jnp.maximum(logf + m, it)
+        decay = jnp.exp(logf + m - m_new)[..., None, None]
+        inp = jnp.exp(it - m_new)[..., None, None]
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        C = decay * C + inp * kf[..., :, None] * vf[..., None, :]
+        n = decay[..., 0] * n + inp[..., 0] * kf
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+        hout = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), hout
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 0, 2, 3).astype(q.dtype), (C, n, m)
+
+
+def mlstm_memory_chunkwise(q, k, v, i_pre, f_pre, chunk: int = 128):
+    """Chunkwise-parallel mLSTM (production form). Shapes as above."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        padf = lambda x: jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        q, k, v = padf(q), padf(k), padf(v)
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)))
+        # padded forget gates: large positive => decay ~ 1, but their inputs
+        # (i_pre = 0) still enter; mask instead with -inf input gate
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=20.0)
+        i_pre = jnp.where(
+            (jnp.arange(nc * chunk) < s)[None, :, None], i_pre, -1e30)
+
+    def rsh(x):  # [B, S, ...] -> [nc, B, chunk, ...]
+        return x.reshape((b, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = rsh(q), rsh(k), rsh(v)
+    ic, fc = rsh(i_pre), rsh(f_pre)
+    logf = jax.nn.log_sigmoid(fc)                       # [nc,B,L,H]
+    csum = jnp.cumsum(logf, axis=2)                     # within-chunk cumsum
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                                 # [B,H,dk,dv], [B,H,dk], [B,H]
+        qi, ki, vi, ii, lfi, csi = xs                   # [B,L,H,*]
+        L_ = qi.shape[1]
+        # log decay from chunk start to step t (inclusive)
+        bseq = csi                                      # [B,L,H]
+        total = csi[:, -1]                              # [B,H]
+        # --- stabilizers ---
+        # running max candidate within the chunk: max over tau<=t of
+        # (b_t - b_tau + i_tau) plus inter term (b_t + m_prev)
+        a_intra = ii - bseq                             # [B,L,H] (i_tau - b_tau)
+        m_intra = jax.lax.cummax(a_intra, axis=1)       # max_tau<=t
+        m_t = jnp.maximum(bseq + m[:, None], bseq + m_intra)  # [B,L,H]
+        m_new = jnp.maximum(total + m, jnp.max(a_intra, axis=1) + total)
+
+        qf = qi.astype(jnp.float32)
+        kf = ki.astype(jnp.float32)
+        vf = vi.astype(jnp.float32)
+
+        # --- inter-chunk: query against carried memory ---
+        inter_scale = jnp.exp(bseq + m[:, None] - m_t)  # [B,L,H]
+        num_inter = jnp.einsum("blhk,bhkv->blhv", qf, C) * inter_scale[..., None]
+        den_inter = jnp.einsum("blhk,bhk->blh", qf, n) * inter_scale
+
+        # --- intra-chunk: masked attention with decay weights ---
+        # weight(t, tau) = exp(b_t - b_tau + i_tau - m_t) for tau <= t
+        logw = (bseq[:, :, None] - bseq[:, None, :]
+                + ii[:, None, :, :] - m_t[:, :, None])  # [B,L,L,H] (t,tau)
+        mask = jnp.tril(jnp.ones((L_, L_), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(logw), 0.0)
+        scores = jnp.einsum("blhk,bthk->blth", qf, kf)  # (l=query t, t=tau)
+        sw = scores * w
+        num_intra = jnp.einsum("blth,bthv->blhv", sw, vf)
+        # denominator n_t^T q_t = sum_tau w(t,tau) * (q_t . k_tau)
+        den_intra = jnp.einsum("blth->blh", sw)
+
+        num = num_inter + num_intra
+        den = den_inter + den_intra
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # --- carry update (end of chunk) ---
+        dec_tail = jnp.exp(total[:, None] - csi + ii - m_new[:, None])  # [B,L,H]
+        C_new = (jnp.exp(total + m - m_new)[..., None, None] * C
+                 + jnp.einsum("blhk,blhv->bhkv", kf * dec_tail[..., None], vf))
+        n_new = (jnp.exp(total + m - m_new)[..., None] * n
+                 + jnp.einsum("blhk->bhk", kf * dec_tail[..., None]))
+        return (C_new, n_new, m_new), hout
+
+    C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (C0, n0, m0), (qc, kc, vc, ic, logf, csum))
+    hs = hs.swapaxes(0, 1).reshape(b, nc * chunk, h, dv)
+    return hs[:, :s].astype(q.dtype), (C, n, m)
+
+
+def apply_mlstm(p: dict, x: jax.Array, cfg: XLSTMConfig, state=None,
+                mode: str = "chunkwise"):
+    """Full mLSTM block. x: [B,S,D]. state for decode: (C, n, m)."""
+    u = x @ p["up"].value.astype(x.dtype)
+    gate = jax.nn.silu(x @ p["up_gate"].value.astype(x.dtype))
+    q, k, v, i_pre, f_pre, _ = _mlstm_qkvif(p, u, cfg.heads)
+    if state is not None:
+        h, new_state = mlstm_memory_recurrent(q, k, v, i_pre, f_pre, state)
+    elif mode == "recurrent":
+        h, new_state = mlstm_memory_recurrent(q, k, v, i_pre, f_pre)
+    else:
+        h, new_state = mlstm_memory_chunkwise(q, k, v, i_pre, f_pre,
+                                              cfg.chunk)
+    b, s, heads, dh = h.shape
+    hflat = h.reshape(b, s, heads * dh)
+    hflat = L.apply_norm("rms", p["norm"], hflat)
+    hflat = hflat + p["skip_scale"].value.astype(x.dtype) * u
+    out = (hflat * gate) @ p["down"].value.astype(x.dtype)
+    return out, new_state
+
+
+# ------------------------------------------------------------------ sLSTM
+def make_slstm(key, d: int, cfg: XLSTMConfig) -> dict:
+    h = cfg.heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    p = {
+        "conv": _make_causal_conv(ks[0], d, cfg.conv_width),
+        "w": L.Param(L.normal_init(ks[1], (d, 4 * d), d ** -0.5),
+                     ("embed", "ff")),
+        "r": L.Param(L.normal_init(ks[2], (h, dh, 4 * dh), dh ** -0.5),
+                     ("heads", None, None)),
+        "b": L.Param(jnp.zeros((4 * d,)), (None,)),
+        "norm": L.make_norm("rms", d),
+        "up": L.dense_param(ks[3], d, 2 * int(d * cfg.slstm_proj_factor),
+                            "embed", "ff"),
+        "down": L.dense_param(ks[4], int(d * cfg.slstm_proj_factor), d,
+                              "ff", "embed"),
+    }
+    return p
+
+
+def apply_slstm(p: dict, x: jax.Array, cfg: XLSTMConfig, state=None):
+    """sLSTM block: sequential scalar-memory LSTM + GeGLU MLP.
+
+    x: [B,S,D]. state (decode): (c, n, h, m) each [B, D] (f32).
+    """
+    b, s, d = x.shape
+    nh = cfg.heads
+    dh = d // nh
+    xc = jax.nn.silu(_causal_conv(p["conv"], x))
+    pre = xc @ p["w"].value.astype(x.dtype) + p["b"].value.astype(x.dtype)
+    pre = pre.reshape(b, s, 4, nh, dh)
+
+    if state is None:
+        c0 = jnp.zeros((b, nh, dh), jnp.float32)
+        n0 = jnp.ones((b, nh, dh), jnp.float32)
+        h0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.zeros((b, nh, dh), jnp.float32)
+    else:
+        c0, n0, h0, m0 = state
+
+    rmat = p["r"].value.astype(jnp.float32)             # [H, dh, 4*dh]
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, rmat).reshape(b, nh, 4, dh)
+        z = pre_t.astype(jnp.float32) + rec.transpose(0, 2, 1, 3)
+        zi, zf, zz, zo = z[:, 0], z[:, 1], z[:, 2], z[:, 3]
+        m_new = jnp.maximum(zf + m, zi)                 # exponential gating
+        i = jnp.exp(zi - m_new)
+        f = jnp.exp(zf + m - m_new)
+        c_new = f * c + i * jnp.tanh(zz)
+        n_new = f * n + i
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    step = jax.checkpoint(step)   # store only the carried cell state
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0),
+                                    pre.transpose(1, 0, 2, 3, 4))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = L.apply_norm("rms", p["norm"], y)
+    # GeGLU feed-forward
+    uv = y @ p["up"].value.astype(x.dtype)
+    u, v = jnp.split(uv, 2, axis=-1)
+    y = (jax.nn.gelu(u) * v) @ p["down"].value.astype(x.dtype)
+    return y, (c, n, h, m)

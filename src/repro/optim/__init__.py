@@ -1,0 +1,1 @@
+from .adamw import AdamW, AdamWState, cosine_schedule, global_norm  # noqa: F401

@@ -1,0 +1,115 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and optional
+int8 gradient compression with error feedback.
+
+Optimizer state mirrors the parameter pytree (Param leaves), so the same
+logical-axis sharding rules apply to ``m``/``v`` -- FSDP shards optimizer
+state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    err: dict | None        # error-feedback residual (compression only)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    """lr may be a float or a schedule fn(step) -> float."""
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress: bool = False   # int8 transport compression w/ error feedback
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(m=zeros(), v=zeros(),
+                          err=zeros() if self.compress else None)
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params, step):
+        """Returns (updates, new_state); apply with params + updates."""
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        if self.compress:
+            grads, err = compress_with_feedback(grads, state.err)
+        else:
+            err = state.err
+
+        if self.clip_norm > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - self.b1 ** t
+        bc2 = 1.0 - self.b2 ** t
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: self.b2 * v_ + (1 - self.b2) * g * g,
+                         state.v, grads)
+        lr = self._lr(step)
+
+        def upd(p, m_, v_):
+            step_ = m_ / bc1 / (jnp.sqrt(v_ / bc2) + self.eps)
+            wd = self.weight_decay * p.astype(jnp.float32)
+            return (-(lr * (step_ + wd))).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, AdamWState(m=m, v=v, err=err)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                        for x in jax.tree.leaves(tree)))
+
+
+def compress_with_feedback(grads, err):
+    """Simulated transport compression: per-tensor int8 quantization with
+    error feedback (residual carried to the next step).
+
+    On a real fleet this pairs with a quantized reduce-scatter across the
+    pod axis; here the quantization error (the part that changes training
+    dynamics) is modelled exactly, and tests assert convergence parity.
+    """
+    def q(g, e):
+        g = g + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        qg = jnp.clip(jnp.round(g / scale), -127, 127)
+        deq = qg * scale
+        return deq, g - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.flatten(err)[0]
+    out = [q(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_g, new_e
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    """Linear warmup + cosine decay to floor_frac * peak."""
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = floor_frac * peak + (1 - floor_frac) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,1 @@
+from . import fault, sharding  # noqa: F401

@@ -1,0 +1,95 @@
+"""Fault tolerance and straggler instrumentation.
+
+The pieces a 1000+-node fleet needs, implemented so that the single-process
+container exercises the exact code paths:
+
+* ``StepTimer`` -- per-step wall-time tracker flagging stragglers
+  (> k x running median). On a fleet this feeds the scheduler/health system;
+  here it logs and counts.
+* ``Preemption`` -- SIGTERM/SIGINT handler that flips a flag; the train loop
+  checkpoints and exits cleanly on the next step boundary (TPU preemption
+  notice pattern).
+* ``run_with_restarts`` -- supervisor that restarts the training function on
+  crash; the train fn resumes from the latest checkpoint, so the
+  crash -> restart -> restore path is tested end-to-end.
+"""
+from __future__ import annotations
+
+import collections
+import logging
+import signal
+import statistics
+import time
+
+log = logging.getLogger("repro.fault")
+
+
+class StepTimer:
+    def __init__(self, window: int = 50, straggler_factor: float = 2.0):
+        self.times = collections.deque(maxlen=window)
+        self.factor = straggler_factor
+        self.straggler_steps: list[int] = []
+        self._t0 = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> float:
+        dt = time.perf_counter() - self._t0
+        if len(self.times) >= 5:
+            med = statistics.median(self.times)
+            if dt > self.factor * med:
+                self.straggler_steps.append(step)
+                log.warning("straggler step %d: %.3fs vs median %.3fs",
+                            step, dt, med)
+        self.times.append(dt)
+        return dt
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self.times) if self.times else 0.0
+
+
+class Preemption:
+    """Flag-based graceful preemption (SIGTERM -> checkpoint -> exit)."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.requested = False
+        self._signals = signals
+        self._old = {}
+
+    def __enter__(self):
+        for s in self._signals:
+            self._old[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+        return False
+
+    def _handler(self, signum, frame):
+        log.warning("preemption signal %s received; will checkpoint "
+                    "and exit at the next step boundary", signum)
+        self.requested = True
+
+
+def run_with_restarts(train_fn, max_restarts: int = 3,
+                      retry_delay: float = 0.0):
+    """Supervise ``train_fn()``; on exception, restart (the fn must resume
+    from its checkpointer). Returns the last result."""
+    attempt = 0
+    while True:
+        try:
+            return train_fn()
+        except KeyboardInterrupt:
+            raise
+        except Exception as e:                      # noqa: BLE001
+            attempt += 1
+            if attempt > max_restarts:
+                log.error("giving up after %d restarts", max_restarts)
+                raise
+            log.warning("training crashed (%s); restart %d/%d",
+                        e, attempt, max_restarts)
+            if retry_delay:
+                time.sleep(retry_delay)

@@ -1,0 +1,117 @@
+"""Unit + property tests for bus-invert coding."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import activity, bic, bits as B
+
+
+def _np_bic_reference(words, segments):
+    """Pure-python reference encoder (independent of the JAX scan)."""
+    prev = 0
+    tx_out, inv_out = [], []
+    for w in words:
+        tx = w
+        invs = []
+        for m in segments:
+            width = bin(m).count("1")
+            dist = bin((w ^ prev) & m).count("1")
+            inv = dist * 2 > width
+            if inv:
+                tx ^= m
+            invs.append(inv)
+        tx_out.append(tx)
+        inv_out.append(invs)
+        prev = tx
+    return tx_out, inv_out
+
+
+@given(st.lists(st.integers(0, 0xFFFF), min_size=1, max_size=48),
+       st.sampled_from([bic.MANTISSA_ONLY, bic.FULL_BUS, bic.EXPONENT_ONLY,
+                        bic.MANT_EXP]))
+@settings(max_examples=40, deadline=None)
+def test_encoder_matches_python_reference(words, segments):
+    stream = jnp.array(words, jnp.uint16)[:, None]
+    tx, inv = bic.bic_encode(stream, segments)
+    want_tx, want_inv = _np_bic_reference(words, segments)
+    assert [int(v) for v in tx[:, 0]] == want_tx
+    got_inv = [[bool(inv[t, s, 0]) for s in range(len(segments))]
+               for t in range(len(words))]
+    assert got_inv == want_inv
+
+
+@given(st.lists(st.integers(0, 0xFFFF), min_size=1, max_size=64),
+       st.sampled_from([bic.MANTISSA_ONLY, bic.FULL_BUS, bic.MANT_EXP]))
+@settings(max_examples=40, deadline=None)
+def test_roundtrip(words, segments):
+    stream = jnp.array(words, jnp.uint16)[:, None]
+    tx, inv = bic.bic_encode(stream, segments)
+    dec = bic.bic_decode(tx, inv, segments)
+    assert jnp.all(dec == stream)
+
+
+@given(st.lists(st.integers(0, 0xFFFF), min_size=2, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_bic_never_increases_segment_transitions(words):
+    """Within the encoded segment (+ inv line), BIC toggles <= raw toggles + T/2.
+    The classic guarantee: per step, encoded toggles <= ceil(w/2) <= raw
+    worst case; cumulative encoded (data+inv) <= raw + T (inv line bound)
+    and encoded data-only toggles <= raw toggles."""
+    stream = jnp.array(words, jnp.uint16)[:, None]
+    seg = bic.FULL_BUS
+    raw = int(activity.stream_transitions(stream).sum())
+    enc = int(bic.bic_transitions(stream, seg, include_inv_lines=False).sum())
+    assert enc <= raw
+
+
+def test_per_step_bound():
+    """With BIC on a w-bit segment, each step toggles at most floor(w/2)
+    data bits within the segment."""
+    rng = np.random.default_rng(0)
+    words = rng.integers(0, 1 << 16, size=200, dtype=np.uint16)
+    stream = jnp.asarray(words)[:, None]
+    tx, _ = bic.bic_encode(stream, bic.FULL_BUS)
+    prev = jnp.concatenate([jnp.zeros_like(tx[:1]), tx[:-1]])
+    per_step = B.hamming(tx, prev)
+    assert int(per_step.max()) <= 8  # floor(16/2)
+
+    tx, _ = bic.bic_encode(stream, bic.MANTISSA_ONLY)
+    prev = jnp.concatenate([jnp.zeros_like(tx[:1]), tx[:-1]])
+    per_step = B.hamming(tx, prev, B.MANT_MASK)
+    assert int(per_step.max()) <= 3  # floor(7/2)
+
+
+def test_mantissa_only_leaves_other_bits():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((64, 4)), jnp.bfloat16)
+    stream = B.to_bits(w)
+    tx, _ = bic.bic_encode(stream, bic.MANTISSA_ONLY)
+    assert jnp.all((tx & ~B.MANT_MASK) == (stream & ~B.MANT_MASK))
+
+
+def test_uniform_mantissa_benefits_concentrated_exponent_does_not():
+    """The paper's Fig.2 rationale: near-zero Gaussian weights have
+    concentrated exponents (BIC useless) and uniform mantissas (BIC helps)."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((4096, 8)) * 0.02, jnp.bfloat16)
+    stream = B.to_bits(w)
+    raw = int(activity.stream_transitions(stream).sum())
+    enc_m = int(bic.bic_transitions(stream, bic.MANTISSA_ONLY).sum())
+    enc_e = int(bic.bic_transitions(stream, bic.EXPONENT_ONLY).sum())
+    mant_gain = 1 - enc_m / raw      # full-bus toggles incl. inv line
+    exp_gain = 1 - enc_e / raw
+    assert mant_gain > 0.03          # mantissa BIC clearly helps
+    assert exp_gain < mant_gain      # exponent BIC helps less (or hurts)
+
+
+def test_rejects_overlapping_segments():
+    with pytest.raises(ValueError):
+        bic.bic_encode(jnp.zeros((4, 1), jnp.uint16), (0x00FF, 0x0F00 | 0x80))
+
+
+def test_encode_weight_mantissas_shape():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.bfloat16)
+    tx, inv = bic.encode_weight_mantissas(w)
+    assert tx.shape == (32, 16) and inv.shape == (32, 1, 16)

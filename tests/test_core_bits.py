@@ -1,0 +1,55 @@
+"""Unit + property tests for repro.core.bits."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bits as B
+
+
+def test_roundtrip_bitcast():
+    x = jnp.array([0.0, 1.0, -1.0, 0.5, -3.25, 1e10, -1e-10], jnp.bfloat16)
+    assert jnp.all(B.from_bits(B.to_bits(x)) == x)
+
+
+def test_known_encodings():
+    # 1.0 = 0x3F80, -2.0 = 0xC000, 0.5 = 0x3F00
+    u = B.to_bits(jnp.array([1.0, -2.0, 0.5], jnp.bfloat16))
+    assert [int(v) for v in u] == [0x3F80, 0xC000, 0x3F00]
+
+
+def test_fields():
+    u = B.to_bits(jnp.array([1.0, -1.0, 0.5], jnp.bfloat16))
+    assert list(B.exponent_field(u)) == [127, 127, 126]
+    assert list(B.sign_field(u)) == [0, 1, 0]
+    assert list(B.mantissa_field(u)) == [0, 0, 0]
+
+
+def test_popcount_hamming():
+    a = jnp.array([0x0000, 0xFFFF, 0x0F0F], jnp.uint16)
+    b = jnp.array([0x0000, 0x0000, 0x00FF], jnp.uint16)
+    assert list(B.popcount(a)) == [0, 16, 8]
+    assert list(B.hamming(a, b)) == [0, 16, 8]
+    assert list(B.hamming(a, b, 0x00FF)) == [0, 8, 4]
+
+
+def test_segment_width():
+    assert B.segment_width(0x007F) == 7
+    assert B.segment_width(0x7F80) == 8
+    assert B.segment_width(0xFFFF) == 16
+    assert B.segment_width(0x8000) == 1
+
+
+@given(st.lists(st.integers(0, 0xFFFF), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_hamming_matches_python(words):
+    u = jnp.array(words, jnp.uint16)
+    got = B.popcount(u)
+    want = [bin(w).count("1") for w in words]
+    assert list(got) == want
+
+
+def test_segments_disjoint_cover():
+    assert B.SEGMENTS["sign"] | B.SEGMENTS["exponent"] | B.SEGMENTS["mantissa"] == 0xFFFF
+    assert B.SEGMENTS["sign"] & B.SEGMENTS["exponent"] == 0
+    assert B.SEGMENTS["exponent"] & B.SEGMENTS["mantissa"] == 0

@@ -1,0 +1,92 @@
+"""Unit + property tests for zero-value gating and activity accounting."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import activity, bits as B, zvg
+
+
+def _np_zvg_reference(vals):
+    """Pure-python gated-register model."""
+    held, prev_z = 0, False
+    trans = iz = zeros = 0
+    for v in vals:
+        z = (v & 0x7FFF) == 0
+        nxt = held if z else v
+        trans += bin(nxt ^ held).count("1")
+        iz += int(z != prev_z)
+        zeros += int(z)
+        held, prev_z = nxt, z
+    return trans, iz, zeros
+
+
+@given(st.lists(st.integers(0, 0xFFFF), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_zvg_matches_python_reference(words):
+    stream = jnp.array(words, jnp.uint16)[:, None]
+    rep = zvg.zvg_stream_report(stream)
+    t, iz, z = _np_zvg_reference(words)
+    assert int(rep["transitions"][0]) == t
+    assert int(rep["iszero_toggles"][0]) == iz
+    assert int(rep["zeros"][0]) == z
+
+
+@given(st.lists(st.integers(0, 0xFFFF), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_gated_transitions_never_exceed_raw(words):
+    stream = jnp.array(words, jnp.uint16)[:, None]
+    rep = zvg.zvg_stream_report(stream)
+    assert int(rep["transitions"][0]) <= int(rep["transitions_raw"][0])
+
+
+def test_all_zero_stream_is_silent():
+    stream = jnp.zeros((32, 4), jnp.uint16)
+    rep = zvg.zvg_stream_report(stream)
+    assert int(rep["transitions"].sum()) == 0
+    assert int(rep["iszero_toggles"].sum()) == 4  # one rising edge per lane
+    assert int(rep["zeros"].sum()) == 32 * 4
+
+
+def test_negative_zero_counts_as_zero():
+    x = jnp.array([1.0, -0.0, 0.0, 2.0], jnp.bfloat16)
+    assert bool(jnp.all(zvg.is_zero(B.to_bits(x)) == jnp.array(
+        [False, True, True, False])))
+
+
+def test_zero_fraction():
+    x = jnp.array([[0.0, 1.0], [2.0, -0.0]], jnp.bfloat16)
+    assert float(zvg.zero_fraction(x)) == 0.5
+
+
+def test_stream_transitions_simple():
+    s = jnp.array([[0x0000], [0xFFFF], [0xFFFF], [0x0000]], jnp.uint16)
+    # edges: 0->FFFF (16), FFFF->FFFF (0), FFFF->0 (16); init edge 0->0 = 0
+    assert int(activity.stream_transitions(s).sum()) == 32
+    assert int(activity.stream_transitions(s, 0x00FF).sum()) == 16
+
+
+def test_matrix_transitions_axes():
+    m = jnp.asarray(np.random.default_rng(0).standard_normal((8, 16)),
+                    jnp.bfloat16)
+    t0 = int(activity.matrix_transitions(m, axis=0))
+    t1 = int(activity.matrix_transitions(m, axis=1))
+    assert t0 > 0 and t1 > 0 and t0 != t1  # direction matters
+
+
+def test_concentration_metric():
+    flat = jnp.ones(128)
+    peaked = jnp.zeros(128).at[3].set(1000.0)
+    assert float(activity.concentration(peaked, top=4)) > 0.99
+    assert float(activity.concentration(flat, top=4)) < 0.05
+
+
+def test_field_histograms_gaussian_weights():
+    """C1: concentrated exponents, near-uniform mantissas for CNN-like
+    weights."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal(20000) * 0.05, jnp.float32)
+    h = activity.field_histograms(w)
+    exp_conc = float(activity.concentration(h["exp_counts"], top=8))
+    mant_conc = float(activity.concentration(h["mant_counts"], top=8))
+    assert exp_conc > 0.8            # 8 exponent buckets hold >80% of mass
+    assert mant_conc < 0.2           # mantissa is spread out

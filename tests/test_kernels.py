@@ -1,0 +1,159 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes, dtypes, block sizes, and data distributions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bits import MANT_MASK, to_bits
+from repro.kernels.bic_encode.kernel import bic_encode_pallas
+from repro.kernels.bic_encode.ref import bic_encode_ref
+from repro.kernels.transitions.kernel import transitions_pallas
+from repro.kernels.transitions.ref import transitions_ref
+from repro.kernels.zvg_matmul.kernel import zvg_matmul_pallas
+from repro.kernels.zvg_matmul.ref import zvg_matmul_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _u16(shape):
+    return jnp.asarray(RNG.integers(0, 1 << 16, size=shape, dtype=np.uint16))
+
+
+# ---------------------------------------------------------------- transitions
+@pytest.mark.parametrize("shape", [(1, 1), (7, 3), (256, 128), (300, 130),
+                                   (1000, 17), (33, 257)])
+def test_transitions_shapes(shape):
+    x = _u16(shape)
+    got = transitions_pallas(x)
+    want = transitions_ref(x)
+    assert jnp.array_equal(got, want), shape
+
+
+@pytest.mark.parametrize("mask", [0xFFFF, 0x007F, 0x7F80, 0x8000])
+def test_transitions_masks(mask):
+    x = _u16((129, 64))
+    assert jnp.array_equal(transitions_pallas(x, mask=mask),
+                           transitions_ref(x, mask=mask))
+
+
+@pytest.mark.parametrize("bt,bl", [(64, 128), (256, 128), (128, 256)])
+def test_transitions_block_sizes(bt, bl):
+    x = _u16((500, 200))
+    assert jnp.array_equal(transitions_pallas(x, block_t=bt, block_l=bl),
+                           transitions_ref(x))
+
+
+def test_transitions_with_init():
+    x = _u16((64, 32))
+    init = _u16((32,))
+    assert jnp.array_equal(transitions_pallas(x, init=init),
+                           transitions_ref(x, init=init))
+
+
+def test_transitions_bf16_weights():
+    w = jnp.asarray(RNG.standard_normal((384, 96)) * 0.03, jnp.bfloat16)
+    x = to_bits(w)
+    assert jnp.array_equal(transitions_pallas(x), transitions_ref(x))
+
+
+# ----------------------------------------------------------------- bic_encode
+@pytest.mark.parametrize("shape", [(1, 1), (9, 5), (256, 128), (257, 129),
+                                   (1000, 33)])
+@pytest.mark.parametrize("mask", [int(MANT_MASK), 0xFFFF])
+def test_bic_encode_shapes(shape, mask):
+    x = _u16(shape)
+    tx, inv = bic_encode_pallas(x, mask)
+    tx2, inv2 = bic_encode_ref(x, mask)
+    assert jnp.array_equal(tx, tx2), (shape, mask)
+    assert jnp.array_equal(inv, inv2), (shape, mask)
+
+
+@pytest.mark.parametrize("bt", [32, 128, 512])
+def test_bic_encode_block_boundary_carry(bt):
+    """State must carry exactly across T-block boundaries."""
+    x = _u16((3 * bt + 7, 8))
+    tx, inv = bic_encode_pallas(x, int(MANT_MASK), block_t=bt)
+    tx2, inv2 = bic_encode_ref(x, int(MANT_MASK))
+    assert jnp.array_equal(tx, tx2)
+    assert jnp.array_equal(inv, inv2)
+
+
+def test_bic_encode_real_weight_stream():
+    w = jnp.asarray(RNG.standard_normal((512, 64)) * 0.02, jnp.bfloat16)
+    x = to_bits(w)
+    tx, inv = bic_encode_pallas(x, int(MANT_MASK))
+    tx2, inv2 = bic_encode_ref(x, int(MANT_MASK))
+    assert jnp.array_equal(tx, tx2) and jnp.array_equal(inv, inv2)
+
+
+def test_bic_encode_decodable():
+    """Kernel output must decode back to the original stream."""
+    from repro.core import bic
+    x = _u16((300, 16))
+    tx, inv = bic_encode_pallas(x, int(MANT_MASK))
+    dec = bic.bic_decode(tx, inv[:, None, :], (int(MANT_MASK),))
+    assert jnp.array_equal(dec, x)
+
+
+# ----------------------------------------------------------------- zvg_matmul
+def _sparse_a(m, k, zf, dtype=jnp.bfloat16, zero_blocks=()):
+    a = RNG.standard_normal((m, k)).astype(np.float32)
+    a[RNG.random((m, k)) < zf] = 0.0
+    for (bi, bj, bs) in zero_blocks:
+        a[bi:bi + bs, bj:bj + bs] = 0.0
+    return jnp.asarray(a, dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (100, 200, 50), (1, 128, 1), (130, 257, 70)])
+def test_zvg_matmul_shapes(m, k, n):
+    a = _sparse_a(m, k, 0.5)
+    b = jnp.asarray(RNG.standard_normal((k, n)), jnp.bfloat16)
+    out, gated = zvg_matmul_pallas(a, b)
+    out2, gated2 = zvg_matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=2e-2, atol=2e-2)
+    assert jnp.array_equal(gated, gated2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_zvg_matmul_dtypes(dtype):
+    a = _sparse_a(64, 256, 0.4, dtype)
+    b = jnp.asarray(RNG.standard_normal((256, 64)), dtype)
+    out, _ = zvg_matmul_pallas(a, b)
+    want = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_zvg_matmul_gates_zero_blocks():
+    """All-zero A tiles must be reported gated and contribute exact zeros."""
+    a = _sparse_a(256, 384, 0.0, zero_blocks=[(0, 0, 128), (128, 256, 128)])
+    b = jnp.asarray(RNG.standard_normal((384, 128)), jnp.bfloat16)
+    out, gated = zvg_matmul_pallas(a, b)
+    _, gated2 = zvg_matmul_ref(a, b)
+    assert int(gated.sum()) == 2
+    assert jnp.array_equal(gated, gated2)
+    want = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_zvg_matmul_all_zero():
+    a = jnp.zeros((128, 256), jnp.bfloat16)
+    b = jnp.asarray(RNG.standard_normal((256, 128)), jnp.bfloat16)
+    out, gated = zvg_matmul_pallas(a, b)
+    assert float(jnp.abs(out).max()) == 0.0
+    assert int(gated.sum()) == gated.size
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 128, 128),
+                                      (64, 128, 256)])
+def test_zvg_matmul_block_sweep(bm, bn, bk):
+    a = _sparse_a(192, 320, 0.6)
+    b = jnp.asarray(RNG.standard_normal((320, 192)), jnp.bfloat16)
+    out, gated = zvg_matmul_pallas(a, b, block_m=bm, block_n=bn, block_k=bk)
+    out2, gated2 = zvg_matmul_ref(a, b, block_m=bm, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=2e-2, atol=2e-2)
+    assert jnp.array_equal(gated, gated2)

@@ -1,0 +1,124 @@
+"""Tests for the dry-run tooling: HLO analyzer (trip correction, dot
+FLOPs, collective bytes) and the analytic FLOP model."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS
+from repro.launch import flops as F
+from repro.launch import hlo_analysis as H
+
+SYNTHETIC_HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(%x, %y)
+}
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %gte0 = s32[] get-tuple-element(%arg), index=0
+  %gte1 = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.5 = f32[8,16]{1,0} dot(%gte1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.5), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add.clone
+  %c1 = s32[] constant(1)
+  %next = s32[] add(%gte0, %c1)
+  ROOT %tuple.2 = (s32[], f32[8,16]) tuple(%next, %ar)
+}
+
+%cond.1 (arg.2: (s32[], f32[8,16])) -> pred[] {
+  %arg.2 = (s32[], f32[8,16]) parameter(0)
+  %gte.3 = s32[] get-tuple-element(%arg.2), index=0
+  %limit = s32[] constant(12)
+  ROOT %lt = pred[] compare(%gte.3, %limit), direction=LT
+}
+
+ENTRY %main.1 (p0: f32[8,16]) -> f32[] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tuple.1 = (s32[], f32[8,16]) tuple(%zero, %p0)
+  %while.1 = (s32[], f32[8,16]) while(%tuple.1), condition=%cond.1, body=%body.1
+  %gte.9 = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+  %ag = f32[8,32]{1,0} all-gather(%gte.9), channel_id=2, replica_groups=[4,2]<=[8], dimensions={1}
+  ROOT %reduce.1 = f32[] reduce(%ag, %zero), dimensions={0,1}, to_apply=%add.clone
+}
+"""
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[8,16]{1,0}") == 512
+    assert H._shape_bytes("bf16[4]") == 8
+    assert H._shape_bytes("(f32[2], s32[3])") == 20
+    assert H._shape_bytes("pred[]") == 1
+
+
+def test_analyzer_trip_correction_and_flops():
+    res = H.analyze(SYNTHETIC_HLO)
+    # while body: dot = 2 * 8*16 * 16 = 4096 flops, x12 trips
+    assert res["dot_flops"] == 4096 * 12
+    # all-reduce in body: 512 B x12; all-gather at top: 8*32*4 = 1024 B
+    assert res["per_kind"]["all-reduce"] == 512 * 12
+    assert res["per_kind"]["all-gather"] == 1024
+    assert ("body.1", 12) in res["loops"]
+
+
+def test_analyzer_counts_param_reads():
+    res = H.analyze(SYNTHETIC_HLO)
+    # body reads its carried activation every trip: mem bytes must exceed
+    # 12x the activation size
+    assert res["mem_bytes"] > 12 * 512
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_counts_positive_and_ordered(name):
+    cfg = ARCHS[name]
+    pc = F.param_counts(cfg)
+    assert pc["total"] >= pc["active"] > 0
+    if cfg.moe is None:
+        assert pc["total"] == pc["active"]
+    else:
+        assert pc["total"] > pc["active"]
+
+
+def test_param_counts_sanity_known_models():
+    """Non-embedding param counts should be near the advertised sizes."""
+    # deepseek-67b: ~66e9 non-embedding params
+    pc = F.param_counts(ARCHS["deepseek-67b"])
+    assert 55e9 < pc["total"] < 75e9
+    # qwen1.5-0.5b: ~0.3e9 non-embedding (0.46B incl. embeddings)
+    pc = F.param_counts(ARCHS["qwen1.5-0.5b"])
+    assert 0.2e9 < pc["total"] < 0.4e9
+    # phi3.5-moe: 42B total / 6.6B active
+    pc = F.param_counts(ARCHS["phi3.5-moe-42b-a6.6b"])
+    assert 35e9 < pc["total"] < 48e9
+    assert 4e9 < pc["active"] < 9e9
+
+
+def test_model_flops_scaling():
+    cfg = ARCHS["granite-3-2b"]
+    f1 = F.model_flops(cfg, 4096, 8, "train")["total"]
+    f2 = F.model_flops(cfg, 4096, 16, "train")["total"]
+    assert f2 == pytest.approx(2 * f1, rel=0.01)
+    # train ~ 3x prefill for the same tokens
+    ftr = F.model_flops(cfg, 4096, 8, "train")["dense"]
+    fpf = F.model_flops(cfg, 4096, 8, "prefill")["dense"]
+    assert ftr == pytest.approx(3 * fpf, rel=1e-6)
+
+
+def test_roofline_terms_structure():
+    from repro.launch import roofline
+    rec = {
+        "status": "ok", "n_chips": 256,
+        "hlo": {"dot_flops_per_chip": 197e12, "mem_bytes_per_chip": 819e9,
+                "collective_bytes_per_chip": 25e9},
+        "model_flops": {"total": 197e12 * 256 * 0.5},
+        "memory": {"peak_bytes_per_chip": 2 ** 30},
+    }
+    t = roofline.terms(rec)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(0.5)
+    assert t["bottleneck"] in ("compute", "memory")
+    assert t["mfu_bound"] == pytest.approx(0.5)
