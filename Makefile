@@ -1,0 +1,19 @@
+# Tier-1 verification and CI entry points. Every target exits non-zero on
+# failure (pytest and python propagate their status through make).
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test trace-smoke bench-quick ci
+
+# tier-1: the whole test suite, fail fast
+test:
+	$(PY) -m pytest -x -q
+
+# end-to-end smoke of the model-wide power tracer on the smallest config
+trace-smoke:
+	$(PY) -m benchmarks.trace_full_model --quick
+
+bench-quick: trace-smoke
+
+ci: test trace-smoke

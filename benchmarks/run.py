@@ -8,7 +8,7 @@ import traceback
 
 from . import (activity_reduction, bic_variants, fig2_distributions,
                fig45_per_layer, overall_savings, overhead_scaling,
-               power_monitor_lm)
+               power_monitor_lm, trace_full_model)
 
 SUITES = [
     ("fig2_distributions", fig2_distributions.main),
@@ -18,6 +18,7 @@ SUITES = [
     ("overhead_scaling", overhead_scaling.main),
     ("activity_reduction", activity_reduction.main),
     ("power_monitor_lm", power_monitor_lm.main),
+    ("trace_full_model", trace_full_model.main),
 ]
 
 

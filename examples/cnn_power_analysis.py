@@ -2,10 +2,24 @@
 overall savings table) on ResNet50 and MobileNetV1.
 
 Run:  PYTHONPATH=src python examples/cnn_power_analysis.py [--net resnet50]
+
+With ``--trace``, the same network is additionally analyzed through the
+automatic jaxpr tracer (repro.trace): no hand-written im2col, every conv is
+intercepted at the XLA-primitive level. The two paths agree to sampling
+tolerance, which is the cross-check that the tracer streams the same
+operands the hand-wired analysis does.
 """
 import argparse
 
 from repro.apps.cnn import analysis
+
+
+def run_trace(net: str, n_images: int) -> None:
+    from repro import trace
+    rep = trace.trace_cnn(net, n_images=n_images, res=224)
+    print()
+    print("=== automatic jaxpr trace of the same network ===")
+    print(rep.table(max_rows=12))
 
 
 def main():
@@ -13,6 +27,9 @@ def main():
     ap.add_argument("--net", default="resnet50",
                     choices=["resnet50", "mobilenet"])
     ap.add_argument("--images", type=int, default=1)
+    ap.add_argument("--trace", action="store_true",
+                    help="also run the automatic repro.trace analysis "
+                         "and print its per-layer table")
     args = ap.parse_args()
 
     print(f"analyzing {args.net} ({args.images} synthetic image(s), "
@@ -30,6 +47,8 @@ def main():
           f"(paper: {'9.4' if args.net == 'resnet50' else '6.2'}%)")
     print(f"mean streaming-activity reduction: "
           f"{s['mean_activity_reduction']*100:.1f}% (paper avg: 29%)")
+    if args.trace:
+        run_trace(args.net, args.images)
 
 
 if __name__ == "__main__":

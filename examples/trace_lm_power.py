@@ -1,0 +1,49 @@
+"""What would BIC+ZVG save on a whole language model?
+
+Traces a registry architecture end-to-end -- forward pass and/or decode
+steps -- through the systolic-array power model, printing the per-layer
+table (the paper's Fig. 4/5 methodology applied to an LM) and the
+network-level aggregate. Decode steps accumulate per-site statistics
+across steps, which is how serving-shaped workloads (1-token matmuls
+against a mostly-idle array) are costed honestly.
+
+Run:  PYTHONPATH=src python examples/trace_lm_power.py \
+          [--arch qwen1.5-0.5b] [--mode both] [--json power.json]
+"""
+import argparse
+
+from repro import trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--mode", default="both",
+                    choices=["forward", "decode", "both"])
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=4)
+    ap.add_argument("--geometry", default="paper16",
+                    choices=sorted(trace.sweep.GEOMETRIES))
+    ap.add_argument("--segments", default="mantissa",
+                    choices=sorted(trace.sweep.SEGMENTS))
+    ap.add_argument("--json", default="",
+                    help="write the (last) report to this JSON path")
+    args = ap.parse_args()
+
+    ccfg = trace.sweep.make_capture_config(args.geometry, args.segments)
+    modes = ["forward", "decode"] if args.mode == "both" else [args.mode]
+    rep = None
+    for mode in modes:
+        rep = trace.trace_arch(args.arch, mode, batch=args.batch,
+                               seq=args.seq,
+                               decode_steps=args.decode_steps, cfg=ccfg)
+        print(rep.table())
+        print()
+    if args.json and rep is not None:
+        rep.to_json(args.json)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -161,11 +161,17 @@ class LayerTrace:
 
 
 class _Tracer:
-    """Runs layers while recording the lowered matmul operands."""
+    """Runs layers while recording the lowered matmul operands.
 
-    def __init__(self, ws: dict[str, jax.Array], bn: dict):
+    With ``record=False`` the layers run WITHOUT materializing im2col
+    operands (``conv_general_dilated_patches`` is itself a grouped conv,
+    which would pollute a jaxpr-level trace of the forward)."""
+
+    def __init__(self, ws: dict[str, jax.Array], bn: dict,
+                 record: bool = True):
         self.ws = ws
         self.bn = bn
+        self.record = record
         self.traces: list[LayerTrace] = []
 
     def _record(self, name, kind, A, W):
@@ -176,8 +182,9 @@ class _Tracer:
 
     def conv(self, name, x, kernel, stride, relu=True):
         w = self.ws[name]
-        self._record(name, "conv", _im2col(x, kernel, stride),
-                     w.reshape(-1, w.shape[-1]))
+        if self.record:
+            self._record(name, "conv", _im2col(x, kernel, stride),
+                         w.reshape(-1, w.shape[-1]))
         y = _conv(x, w, stride)
         g, b = self.bn[name]
         return _bn_relu(y, g, b, relu)
@@ -185,19 +192,21 @@ class _Tracer:
     def dwconv(self, name, x, kernel, stride, relu=True):
         w = self.ws[name]
         c = w.shape[3]
-        self._record(name, "dwconv", _im2col(x, kernel, stride),
-                     w.reshape(kernel * kernel, c))
+        if self.record:
+            self._record(name, "dwconv", _im2col(x, kernel, stride),
+                         w.reshape(kernel * kernel, c))
         y = _conv(x, w, stride, groups=c)
         g, b = self.bn[name]
         return _bn_relu(y, g, b, relu)
 
     def fc(self, name, x):
         w = self.ws[name]
-        self._record(name, "fc", x, w)
+        if self.record:
+            self._record(name, "fc", x, w)
         return x @ w
 
 
-def _forward_resnet50(tr: _Tracer, x: jax.Array) -> None:
+def _forward_resnet50(tr: _Tracer, x: jax.Array) -> jax.Array:
     x = tr.conv("stem", x, 7, 2)
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
                               (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
@@ -216,10 +225,10 @@ def _forward_resnet50(tr: _Tracer, x: jax.Array) -> None:
                 sc = inp
             x = jax.nn.relu(y + sc)
     x = x.mean(axis=(1, 2))
-    tr.fc("fc", x)
+    return tr.fc("fc", x)
 
 
-def _forward_mobilenet(tr: _Tracer, x: jax.Array) -> None:
+def _forward_mobilenet(tr: _Tracer, x: jax.Array) -> jax.Array:
     x = tr.conv("stem", x, 3, 2)
     plan = [(32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2),
             (256, 256, 1), (256, 512, 2)] + [(512, 512, 1)] * 5 + \
@@ -228,10 +237,28 @@ def _forward_mobilenet(tr: _Tracer, x: jax.Array) -> None:
         x = tr.dwconv(f"dw{i+1}", x, 3, s)
         x = tr.conv(f"pw{i+1}", x, 1, 1)
     x = x.mean(axis=(1, 2))
-    tr.fc("fc", x)
+    return tr.fc("fc", x)
 
 
 _FORWARDS = {"resnet50": _forward_resnet50, "mobilenet": _forward_mobilenet}
+
+
+def make_forward(net: str, seed: int = 0):
+    """Plain jit-able ``images -> logits`` forward (no operand recording).
+
+    This is what the jaxpr tracer (:mod:`repro.trace`) consumes: conv
+    operands are intercepted at the primitive level, so no Python-side
+    im2col is needed -- or wanted, since its patch extraction is itself a
+    grouped conv that would show up as a spurious trace site.
+    """
+    specs = NETS[net]()
+    ws = init_weights(specs, seed)
+    bn = init_bn(specs, seed)
+
+    def forward(images: jax.Array) -> jax.Array:
+        return _FORWARDS[net](_Tracer(ws, bn, record=False), images)
+
+    return forward
 
 
 def forward_with_traces(net: str, images: jax.Array, seed: int = 0

@@ -8,6 +8,15 @@ paper's ASIC-level insight is surfaced inside a production training/serving
 stack: it answers "what would this layer's data streaming cost, and how much
 would selective encoding save" for real workload tensors.
 
+Two entry points:
+
+* :func:`monitor_streams` -- pre-shaped ``[M, K] x [K, N]`` operands in,
+  raw activity counters + full power breakdown out. This is the primitive
+  the model-wide tracer (:mod:`repro.trace`) builds on.
+* :func:`monitor_matmul` -- convenience wrapper that reshapes/sub-samples
+  arbitrary ``[..., K]`` activations and returns the headline ratios (plus
+  the sample sizes actually used).
+
 All functions are jit-compatible; instrumentation is off unless
 ``TrainConfig.power_monitor`` / ``ServeConfig.power_monitor`` is set, and
 sampling keeps the overhead bounded (the monitor sub-samples rows/columns of
@@ -39,12 +48,68 @@ DEFAULT_MONITOR = MonitorConfig()
 
 
 def _subsample(x: jax.Array, cap: int, axis: int) -> jax.Array:
+    """Evenly strided sample of ``cap`` indices spanning the WHOLE axis.
+
+    ``floor(i * n / cap)`` reaches into the last ``n/cap``-sized bucket, so
+    the tail of the axis is represented (a plain integer stride
+    ``arange(cap) * (n // cap)`` never samples the last ``n - cap*(n//cap)``
+    rows, biasing zero-fraction estimates on activation tensors whose
+    statistics drift along the axis).
+    """
     n = x.shape[axis]
     if n <= cap:
         return x
-    stride = n // cap
-    idx = jnp.arange(cap) * stride
+    idx = jnp.floor(jnp.arange(cap) * (n / cap)).astype(jnp.int32)
     return jnp.take(x, idx, axis=axis)
+
+
+def subsample_operands(acts: jax.Array, weights: jax.Array,
+                       cfg: MonitorConfig = DEFAULT_MONITOR
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Reshape ``[..., K]`` activations to ``[M, K]`` and cap both operands
+    at the config's sampling limits. Shapes are static, so this composes
+    with jit/vmap."""
+    A = acts.reshape(-1, acts.shape[-1])
+    A = _subsample(A, cfg.max_rows, 0)
+    A = _subsample(A, cfg.max_depth, 1)
+    W = _subsample(weights, cfg.max_depth, 0)
+    W = _subsample(W, cfg.max_cols, 1)
+    return A, W
+
+
+def sample_sizes(acts_shape, weights_shape,
+                 cfg: MonitorConfig = DEFAULT_MONITOR) -> dict:
+    """Static (host-side) sampled-vs-full sizes for the given shapes."""
+    m = 1
+    for d in acts_shape[:-1]:
+        m *= int(d)
+    k, n = int(weights_shape[0]), int(weights_shape[1])
+    return {
+        "full_m": m, "full_k": k, "full_n": n,
+        "sample_m": min(m, cfg.max_rows),
+        "sample_k": min(k, cfg.max_depth),
+        "sample_n": min(n, cfg.max_cols),
+    }
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def monitor_streams(A: jax.Array, W: jax.Array,
+                    cfg: MonitorConfig = DEFAULT_MONITOR) -> dict:
+    """Raw counters + power breakdown for pre-shaped ``[M,K] x [K,N]``.
+
+    No reshaping or sub-sampling happens here: the caller controls exactly
+    which streams are modelled (the tracer samples per-site; callers with
+    small operands pass them whole).
+
+    Returns:
+      ``{"report": <sa_stream_report counters>, "power": <sa_power dict>}``
+      -- raw counters, not just ratios, so callers can aggregate energies
+      across sites with :func:`repro.core.power.aggregate_savings`.
+    """
+    rep = systolic.sa_stream_report(
+        A, W, cfg.geometry, tuple(cfg.bic_segments), cfg.zvg)
+    pw = power.sa_power(rep)
+    return {"report": rep, "power": pw}
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -57,32 +122,39 @@ def monitor_matmul(acts: jax.Array, weights: jax.Array,
       weights: ``[K, N]``.
     Returns:
       dict of scalar metrics: zero fraction, streaming activity reduction,
-      modelled total/streaming power savings, streaming share.
+      modelled total/streaming power savings, streaming share, and the
+      sample sizes actually streamed through the model.
     """
-    A = acts.reshape(-1, acts.shape[-1])
-    A = _subsample(A, cfg.max_rows, 0)
-    A = _subsample(A, cfg.max_depth, 1)
-    W = _subsample(weights, cfg.max_depth, 0)
-    W = _subsample(W, cfg.max_cols, 1)
-    rep = systolic.sa_stream_report(
-        A, W, cfg.geometry, cfg.bic_segments, cfg.zvg)
-    pw = power.sa_power(rep)
-    return {
+    A, W = subsample_operands(acts, weights, cfg)
+    out = monitor_streams(A, W, cfg)
+    rep, pw = out["report"], out["power"]
+    sizes = sample_sizes(acts.shape, weights.shape, cfg)
+    metrics = {
         "zero_fraction": rep["zero_fraction"],
         "activity_reduction": systolic.streaming_activity_reduction(rep),
         "saving_total": pw["saving_total"],
         "saving_streaming": pw["saving_streaming"],
         "streaming_share": pw["streaming_share_base"],
     }
+    metrics.update({k: jnp.float32(v) for k, v in sizes.items()})
+    return metrics
+
+
+#: size-metadata keys in monitor_matmul's output (not power metrics)
+SIZE_KEYS = ("full_m", "full_k", "full_n", "sample_m", "sample_k",
+             "sample_n")
 
 
 def summarize(layer_metrics: dict[str, dict]) -> dict:
-    """Mean metrics across monitored layers (for logging)."""
+    """Mean metrics across monitored layers (for logging). Size metadata
+    is excluded -- averaging sample caps across layers is meaningless."""
     if not layer_metrics:
         return {}
     keys = next(iter(layer_metrics.values())).keys()
     out = {}
     for k in keys:
+        if k in SIZE_KEYS:
+            continue
         out[f"power/{k}_mean"] = jnp.mean(
             jnp.stack([m[k] for m in layer_metrics.values()]))
     return out

@@ -47,6 +47,12 @@ class TrainConfig:
     ckpt_every: int = 25
     model_parallel: int = 1
     power_monitor: bool = False
+    # full-model power tracing (repro.trace): every N steps, interpret the
+    # forward pass and log network-level BIC+ZVG savings; 0 = off. Traces
+    # run host-side outside the jitted step (they are analysis, not
+    # training work) -- keep the interval large on real runs.
+    power_trace_every: int = 0
+    power_trace_dir: str = ""
     seed: int = 0
 
 
@@ -75,6 +81,33 @@ def init_state(cfg, opt, mesh, seed):
     return params, opt_state, pshard, oshard
 
 
+def _power_trace(tc: TrainConfig, cfg, params, batch, step: int) -> dict:
+    """Trace the full forward pass through the SA power model and log the
+    network-level aggregate (the paper's overall-savings methodology,
+    applied to the training workload as it runs)."""
+    from repro.models import lm as lm_mod
+    from repro.trace import trace_model
+
+    # forward + output head (the logits projection dominates many LMs)
+    rep = trace_model(
+        lambda p, b: lm_mod.logits_fn(p, cfg,
+                                      lm_mod.apply_model(p, cfg, b)[0]),
+        params, batch, name=f"{cfg.name}@{step}")
+    agg = rep.summary()
+    log.info(
+        "power-trace step %d: %d matmul sites, zero %.1f%%, "
+        "streaming saving %.1f%%, total saving %.1f%% (share %.1f%%)",
+        step, agg["n_sites"], agg["mean_zero_fraction"] * 100,
+        agg["streaming_saving"] * 100, agg["total_saving"] * 100,
+        agg["streaming_share"] * 100)
+    if tc.power_trace_dir:
+        import os
+        os.makedirs(tc.power_trace_dir, exist_ok=True)
+        rep.to_json(os.path.join(tc.power_trace_dir,
+                                 f"trace_step{step:06d}.json"))
+    return agg
+
+
 def train(tc: TrainConfig, mesh=None) -> dict:
     from repro.launch.mesh import make_host_mesh
     mesh = mesh or make_host_mesh(model=tc.model_parallel)
@@ -99,6 +132,7 @@ def train(tc: TrainConfig, mesh=None) -> dict:
                                        seed=tc.seed))
     timer = fault.StepTimer()
     metrics_hist = []
+    power_traces = []
 
     with mesh, fault.Preemption() as preempt:
         for step in range(start_step, tc.steps):
@@ -112,6 +146,9 @@ def train(tc: TrainConfig, mesh=None) -> dict:
             if step % 10 == 0 or step == tc.steps - 1:
                 log.info("step %5d loss %.4f (%.0f ms)", step, loss,
                          dt * 1e3)
+            if tc.power_trace_every and step % tc.power_trace_every == 0:
+                agg = _power_trace(tc, cfg, params, batch, step)
+                power_traces.append({"step": step, **agg})
             if ckpt is not None and (step % tc.ckpt_every == 0
                                      or step == tc.steps - 1
                                      or preempt.requested):
@@ -125,6 +162,7 @@ def train(tc: TrainConfig, mesh=None) -> dict:
     return {"final_loss": metrics_hist[-1]["loss"] if metrics_hist
             else float("nan"),
             "history": metrics_hist,
+            "power_traces": power_traces,
             "stragglers": timer.straggler_steps,
             "median_step_time": timer.median}
 

@@ -23,6 +23,12 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+# imported at module level on purpose: repro.core builds bit-mask constants
+# with jnp ops at import time, which must not first happen inside a jit
+# trace (the constants would become tracers); see _monitor_metrics
+from repro.core import monitor as _pm_monitor
+from repro.core import systolic as _pm_systolic
+
 from . import layers as L
 from . import transformer as T
 from .config import ArchConfig
@@ -97,10 +103,11 @@ def _head_weights(params, cfg: ArchConfig, dtype):
 def logits_fn(params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
     """h [..., D] -> logits [..., V] (or [..., K, V] for codes)."""
     w = _head_weights(params, cfg, h.dtype)
-    if cfg.inputs == "codes":
-        out = jnp.einsum("...d,kdv->...kv", h, w)
-    else:
-        out = h @ w
+    with jax.named_scope("lm_head"):
+        if cfg.inputs == "codes":
+            out = jnp.einsum("...d,kdv->...kv", h, w)
+        else:
+            out = h @ w
     out = out.astype(jnp.float32) * cfg.logit_mult
     if cfg.logit_softcap > 0:
         out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap
@@ -111,8 +118,9 @@ def logits_fn(params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
 def apply_model(params, cfg: ArchConfig, inputs: dict, *, states=None,
                 prefill=False, cache_len=0, constrain: Constrain = _id):
     """Forward to final hidden states. Returns (h, new_states, aux)."""
-    x, positions = embed_inputs(params, cfg, inputs,
-                                dtype=jnp.dtype(cfg.compute_dtype))
+    with jax.named_scope("embed"):
+        x, positions = embed_inputs(params, cfg, inputs,
+                                    dtype=jnp.dtype(cfg.compute_dtype))
     x = constrain(x)
     x, new_states, aux = T.apply_stack(
         params["stack"], x, cfg, positions=positions, states=states,
@@ -247,7 +255,7 @@ def _monitor_metrics(params, cfg: ArchConfig, batch) -> dict:
     """Paper's PowerMonitor on representative (activation, weight) pairs:
     the embedded inputs against layer-0 projection weights, streamed
     through an MXU-geometry systolic array."""
-    from repro.core import monitor, systolic
+    monitor, systolic = _pm_monitor, _pm_systolic
     x, _ = embed_inputs(params, cfg, batch)
     x2 = x.reshape(-1, x.shape[-1])[:256]
     g0 = jax.tree.map(lambda a: a[0], params["stack"]["groups"])
@@ -260,7 +268,8 @@ def _monitor_metrics(params, cfg: ArchConfig, batch) -> dict:
             break
     mcfg = monitor.MonitorConfig(geometry=systolic.MXU_SA)
     m = monitor.monitor_matmul(x2, w[:, :256], mcfg)
-    return {f"power/{k}": v for k, v in m.items()}
+    return {f"power/{k}": v for k, v in m.items()
+            if k not in monitor.SIZE_KEYS}
 
 
 def make_decode_state(cfg: ArchConfig, batch: int, cache_len: int,

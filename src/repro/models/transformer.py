@@ -150,9 +150,10 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
     scale = cfg.attn_scale or None
 
     def proj(w, bname, nh):
-        y = x @ p[w].value.astype(x.dtype)
-        if bname in p:
-            y = y + p[bname].value.astype(x.dtype)
+        with jax.named_scope(w):
+            y = x @ p[w].value.astype(x.dtype)
+            if bname in p:
+                y = y + p[bname].value.astype(x.dtype)
         return y.reshape(b, s, nh, hd)
 
     q = proj("wq", "bq", h)
@@ -187,7 +188,9 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
                                      constrain_q=cfg.pos != "mrope")
             new_state = (kc, vc)
         out = out.reshape(b, s, h * hd)
-        return out @ p["wo"].value.astype(x.dtype), new_state
+        with jax.named_scope("wo"):
+            out = out @ p["wo"].value.astype(x.dtype)
+        return out, new_state
 
     if local:                                   # ---- parallel
         out = A.sliding_window_attention(q, k, v, window=cfg.window,
@@ -196,7 +199,8 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
         out = A.chunked_attention(q, k, v, causal=True, scale=scale,
                                   softcap=cfg.attn_softcap,
                                   block_k=cfg.attn_block_k)
-    out = out.reshape(b, s, h * hd) @ p["wo"].value.astype(x.dtype)
+    with jax.named_scope("wo"):
+        out = out.reshape(b, s, h * hd) @ p["wo"].value.astype(x.dtype)
 
     new_state = None
     if prefill:
@@ -397,18 +401,23 @@ def apply_block(p, x, cfg: ArchConfig, spec: str, *, positions,
     mixer, ffn = parse_spec(spec)
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(cfg.norm, p["norm1"], x)
-    out, new_state = apply_mixer(p["mixer"], h, cfg, mixer,
-                                 positions=positions, state=state,
-                                 prefill=prefill, cache_len=cache_len)
+    # named scopes are the tracer's stable layer-naming hook: they land in
+    # every equation's name stack, so repro.trace reports e.g.
+    # "scan[3]/attn/wq" instead of a bare equation index
+    with jax.named_scope(mixer):
+        out, new_state = apply_mixer(p["mixer"], h, cfg, mixer,
+                                     positions=positions, state=state,
+                                     prefill=prefill, cache_len=cache_len)
     # constraining each residual add to the SP layout lets GSPMD lower the
     # row-parallel output reductions to reduce-scatters (see §Perf cell B)
     x = constrain(x + cfg.resid_mult * out)
     if ffn != "none":
         h = L.apply_norm(cfg.norm, p["norm2"], x)
-        if ffn == "moe":
-            y, aux = M.apply_moe(p["ffn"], h, cfg.moe, cfg.act)
-        else:
-            y = L.apply_mlp(p["ffn"], h, cfg.act)
+        with jax.named_scope(ffn):
+            if ffn == "moe":
+                y, aux = M.apply_moe(p["ffn"], h, cfg.moe, cfg.act)
+            else:
+                y = L.apply_mlp(p["ffn"], h, cfg.act)
         x = constrain(x + cfg.resid_mult * y)
     return x, new_state, aux
 
@@ -443,9 +452,10 @@ def apply_stack(params, x, cfg: ArchConfig, *, positions, states=None,
         aux_sum = jnp.zeros((), jnp.float32)
         for i, spec in enumerate(cfg.pattern):
             st = gstate[f"b{i}"] if decode else None
-            x, nst, aux = apply_block(
-                gparams[f"b{i}"], x, cfg, spec, positions=positions,
-                state=st, prefill=prefill, cache_len=cache_len)
+            with jax.named_scope(f"b{i}"):
+                x, nst, aux = apply_block(
+                    gparams[f"b{i}"], x, cfg, spec, positions=positions,
+                    state=st, prefill=prefill, cache_len=cache_len)
             new_states[f"b{i}"] = nst
             aux_sum = aux_sum + aux
         x = constrain(x)
@@ -461,10 +471,11 @@ def apply_stack(params, x, cfg: ArchConfig, *, positions, states=None,
     head_aux = aux0
     for i, spec in enumerate(cfg.head):
         st = states["head"][i] if decode else None
-        x, nst, aux = apply_block(params["head"][i], x, cfg, spec,
-                                  positions=positions, state=st,
-                                  prefill=prefill, cache_len=cache_len,
-                                  constrain=constrain)
+        with jax.named_scope(f"head{i}"):
+            x, nst, aux = apply_block(params["head"][i], x, cfg, spec,
+                                      positions=positions, state=st,
+                                      prefill=prefill, cache_len=cache_len,
+                                      constrain=constrain)
         head_aux = head_aux + aux
         new_head.append(nst)
     x = constrain(x)
@@ -513,10 +524,11 @@ def apply_stack(params, x, cfg: ArchConfig, *, positions, states=None,
     new_tail = []
     for i, spec in enumerate(cfg.tail):
         st = states["tail"][i] if decode else None
-        x, nst, aux = apply_block(params["tail"][i], x, cfg, spec,
-                                  positions=positions, state=st,
-                                  prefill=prefill, cache_len=cache_len,
-                                  constrain=constrain)
+        with jax.named_scope(f"tail{i}"):
+            x, nst, aux = apply_block(params["tail"][i], x, cfg, spec,
+                                      positions=positions, state=st,
+                                      prefill=prefill, cache_len=cache_len,
+                                      constrain=constrain)
         aux_total = aux_total + aux
         new_tail.append(nst)
     x = constrain(x)

@@ -1,0 +1,61 @@
+"""repro.trace -- automatic model-wide power tracing via jaxpr interception.
+
+The paper's headline numbers are *network-level*: every matmul a model
+executes, streamed through the proposed systolic array, energies summed
+before taking ratios. This package turns any jit-able callable in the repo
+(LM forward, decode step, MoE layer, CNN inference) into exactly that
+analysis without hand-wiring a single ``monitor_matmul`` call:
+
+    from repro import trace
+    report = trace.trace_model(lambda p, b: lm.apply_model(p, cfg, b)[0],
+                               params, batch, name=cfg.name)
+    print(report.table())
+    report.to_json("power.json")
+
+Layers:
+  interpret -- jaxpr interpreter; finds every dot_general/conv with its
+               concrete operands ([B,M,K] x [B,K,N] streaming form).
+  capture   -- per-site registry with operand- and call-sampling.
+  report    -- per-layer rows + model aggregates, JSON/CSV/text.
+  sweep     -- drive traces across the config registry x SA geometry x
+               BIC segments (the paper's Figs. 4/5 per-layer methodology
+               applied to our models).
+
+``python -m repro.trace`` runs a multi-architecture trace from the CLI.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+from .capture import DEFAULT_CAPTURE, CaptureConfig, TraceCapture
+from .interpret import MatmulSite, trace_fn
+from .report import SitePower, TraceReport, build_report
+from .sweep import run_sweep, trace_arch, trace_cnn  # noqa: F401
+
+__all__ = [
+    "CaptureConfig", "TraceCapture", "MatmulSite", "trace_fn",
+    "SitePower", "TraceReport", "build_report",
+    "trace_model", "trace_calls", "trace_arch", "trace_cnn", "run_sweep",
+]
+
+
+def trace_calls(fn: Callable, calls: Sequence[tuple], *,
+                name: str = "model",
+                cfg: CaptureConfig = DEFAULT_CAPTURE) -> TraceReport:
+    """Trace ``fn(*args)`` for every args-tuple in ``calls``, accumulating
+    per-site statistics across calls (decode steps, multiple batches)."""
+    cap = TraceCapture(cfg)
+    skipped: list[str] = []
+    for args in calls:
+        _, sk = trace_fn(fn, *args, emit=cap,
+                         include_conv=cfg.include_conv, name=name)
+        skipped.extend(sk)
+    return build_report(cap, name, tuple(dict.fromkeys(skipped)))
+
+
+def trace_model(fn: Callable, *args, name: str = "model",
+                cfg: CaptureConfig = DEFAULT_CAPTURE) -> TraceReport:
+    """Trace one call of ``fn(*args)`` and report every matmul's BIC+ZVG
+    power outcome. The function is evaluated faithfully (outputs are
+    computed, control flow follows the real operands)."""
+    return trace_calls(fn, [args], name=name, cfg=cfg)

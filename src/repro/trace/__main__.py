@@ -1,0 +1,95 @@
+"""CLI: model-wide BIC+ZVG power tracing.
+
+Default run traces three distinct architectures -- a dense LM, an MoE, and
+a CNN -- end-to-end and prints per-layer tables plus the network-level
+aggregate; ``--json`` exports the per-layer reports.
+
+    PYTHONPATH=src python -m repro.trace
+    PYTHONPATH=src python -m repro.trace --archs qwen1.5-0.5b --mode decode
+    PYTHONPATH=src python -m repro.trace --sweep --segments mantissa,full
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from . import sweep as sw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.trace",
+        description="Trace every matmul of whole models through the "
+                    "systolic-array BIC+ZVG power model.")
+    ap.add_argument("--archs", default="qwen1.5-0.5b,phi3.5-moe-42b-a6.6b",
+                    help="comma-separated registry architectures "
+                         "('' for none)")
+    ap.add_argument("--nets", default="resnet50",
+                    help="comma-separated CNNs ('' for none)")
+    ap.add_argument("--mode", default="forward",
+                    choices=["forward", "decode"])
+    ap.add_argument("--geometry", default="paper16",
+                    choices=sorted(sw.GEOMETRIES))
+    ap.add_argument("--segments", default="mantissa",
+                    help="BIC segment choice(s), comma-separated "
+                         f"(from {sorted(sw.SEGMENTS)})")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--res", type=int, default=112,
+                    help="CNN input resolution")
+    ap.add_argument("--json", default="",
+                    help="directory to write per-model JSON reports")
+    ap.add_argument("--csv", default="",
+                    help="directory to write per-model CSV reports")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the full geometry x segments sweep and "
+                         "print the summary grid")
+    args = ap.parse_args()
+
+    archs = tuple(a for a in args.archs.split(",") if a)
+    nets = tuple(n for n in args.nets.split(",") if n)
+    segments = tuple(s for s in args.segments.split(",") if s)
+    bad = [s for s in segments if s not in sw.SEGMENTS]
+    if bad or not segments:
+        ap.error(f"unknown --segments {bad or ['(empty)']}; "
+                 f"choose from {sorted(sw.SEGMENTS)}")
+
+    if args.sweep:
+        cells = sw.run_sweep(archs=archs, nets=nets,
+                             geometries=tuple(sorted(sw.GEOMETRIES)),
+                             segments=segments, mode=args.mode,
+                             batch=args.batch, seq=args.seq, res=args.res)
+        print(sw.format_sweep(cells))
+        reports = [(c.model, c.geometry, c.segments, c.report)
+                   for c in cells]
+    else:
+        ccfg = sw.make_capture_config(args.geometry, segments[0])
+        reports = []
+        for arch in archs:
+            rep = sw.trace_arch(arch, args.mode, batch=args.batch,
+                                seq=args.seq, cfg=ccfg)
+            print(rep.table())
+            print()
+            reports.append((arch, args.geometry, segments[0], rep))
+        for net in nets:
+            rep = sw.trace_cnn(net, res=args.res, cfg=ccfg)
+            print(rep.table())
+            print()
+            reports.append((net, args.geometry, segments[0], rep))
+
+    for model, geom, seg, rep in reports:
+        tag = f"{model.replace('/', '_')}_{geom}_{seg.replace('+', '')}"
+        if args.json:
+            os.makedirs(args.json, exist_ok=True)
+            path = os.path.join(args.json, f"trace_{tag}.json")
+            rep.to_json(path)
+            print(f"wrote {path}")
+        if args.csv:
+            os.makedirs(args.csv, exist_ok=True)
+            path = os.path.join(args.csv, f"trace_{tag}.csv")
+            rep.to_csv(path)
+            print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

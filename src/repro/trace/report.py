@@ -1,0 +1,184 @@
+"""Per-layer and model-level power reporting for traced models.
+
+Builds :class:`TraceReport` from a populated
+:class:`repro.trace.capture.TraceCapture`: one :class:`SitePower` row per
+matmul site (the paper's Fig. 4/5 per-layer granularity) and network-level
+aggregates computed the paper's way -- energies summed *before* taking
+ratios (:func:`repro.core.power.aggregate_savings`). Reports serialize to
+JSON (round-trippable), CSV, and a text summary table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import power
+
+from .capture import TraceCapture
+
+
+@dataclasses.dataclass
+class SitePower:
+    """One matmul site's accumulated power outcome (fJ, estimated full)."""
+    name: str
+    kind: str
+    shape: tuple[int, int, int, int]   # (B, M, K, N)
+    calls: int
+    sampled_calls: int
+    macs: float                        # across all calls
+    zero_fraction: float               # mean over sampled calls
+    activity_reduction: float
+    saving_total: float
+    saving_streaming: float
+    streaming_share: float
+    energy_base: float
+    energy_prop: float
+    energy_base_streaming: float
+    energy_prop_streaming: float
+
+    def power_report(self) -> dict:
+        """Shape-compatible with ``power.aggregate_savings`` input."""
+        return {"baseline": {"total": self.energy_base,
+                             "streaming": self.energy_base_streaming},
+                "proposed": {"total": self.energy_prop,
+                             "streaming": self.energy_prop_streaming}}
+
+
+@dataclasses.dataclass
+class TraceReport:
+    model: str
+    geometry: tuple[int, int]
+    bic_segments: tuple[int, ...]
+    sites: list[SitePower]
+    skipped: tuple[str, ...] = ()
+
+    # ---------------------------------------------------------- aggregates
+    def aggregate(self) -> dict:
+        """Model-level savings, energy-weighted like the paper's overall
+        numbers (sum energies across every traced matmul, then ratio)."""
+        if not self.sites:
+            return {"total_saving": 0.0, "streaming_saving": 0.0,
+                    "streaming_share": 0.0}
+        return power.aggregate_savings(
+            [s.power_report() for s in self.sites])
+
+    def summary(self) -> dict:
+        agg = self.aggregate()
+        macs = sum(s.macs for s in self.sites)
+        zf = (sum(s.zero_fraction * s.macs for s in self.sites)
+              / max(macs, 1.0))
+        return {
+            "model": self.model,
+            "geometry": f"{self.geometry[0]}x{self.geometry[1]}",
+            "n_sites": len(self.sites),
+            "n_calls": sum(s.calls for s in self.sites),
+            "macs": macs,
+            "mean_zero_fraction": zf,
+            **agg,
+        }
+
+    # ------------------------------------------------------- serialization
+    def to_json_dict(self) -> dict:
+        return {
+            "model": self.model,
+            "geometry": list(self.geometry),
+            "bic_segments": list(self.bic_segments),
+            "skipped": list(self.skipped),
+            "summary": self.summary(),
+            "sites": [{**dataclasses.asdict(s),
+                       "shape": list(s.shape)} for s in self.sites],
+        }
+
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json_dict(), f, indent=1)
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "TraceReport":
+        sites = []
+        for s in d["sites"]:
+            s = dict(s)
+            s["shape"] = tuple(s["shape"])
+            sites.append(SitePower(**s))
+        return cls(model=d["model"], geometry=tuple(d["geometry"]),
+                   bic_segments=tuple(d["bic_segments"]), sites=sites,
+                   skipped=tuple(d.get("skipped", ())))
+
+    @classmethod
+    def from_json(cls, path: str) -> "TraceReport":
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))
+
+    def to_csv(self, path: str) -> None:
+        cols = ("name", "kind", "calls", "B", "M", "K", "N", "macs",
+                "zero_fraction", "activity_reduction", "saving_total",
+                "saving_streaming", "streaming_share", "energy_base",
+                "energy_prop")
+        with open(path, "w") as f:
+            f.write(",".join(cols) + "\n")
+            for s in self.sites:
+                b, m, k, n = s.shape
+                f.write(",".join(str(v) for v in (
+                    s.name, s.kind, s.calls, b, m, k, n, s.macs,
+                    s.zero_fraction, s.activity_reduction, s.saving_total,
+                    s.saving_streaming, s.streaming_share, s.energy_base,
+                    s.energy_prop)) + "\n")
+
+    # --------------------------------------------------------------- text
+    def table(self, max_rows: int = 40) -> str:
+        hdr = (f"{'site':52s} {'kind':8s} {'calls':>5s} "
+               f"{'B,M,K,N':>18s} {'zero%':>6s} {'act-red%':>8s} "
+               f"{'save%':>6s}")
+        lines = [hdr, "-" * len(hdr)]
+        shown = sorted(self.sites, key=lambda s: -s.energy_base)
+        for s in shown[:max_rows]:
+            b, m, k, n = s.shape
+            name = s.name if len(s.name) <= 52 else "..." + s.name[-49:]
+            lines.append(
+                f"{name:52s} {s.kind:8s} {s.calls:5d} "
+                f"{f'{b},{m},{k},{n}':>18s} {s.zero_fraction*100:6.1f} "
+                f"{s.activity_reduction*100:8.1f} {s.saving_total*100:6.1f}")
+        if len(shown) > max_rows:
+            lines.append(f"... ({len(shown) - max_rows} more sites)")
+        sm = self.summary()
+        lines.append("-" * len(hdr))
+        lines.append(
+            f"{self.model}: {len(self.sites)} sites, "
+            f"{sm['macs']:.3g} MACs | mean zero {sm['mean_zero_fraction']*100:.1f}% "
+            f"| streaming saving {sm['streaming_saving']*100:.1f}% "
+            f"| total saving {sm['total_saving']*100:.1f}% "
+            f"(streaming share {sm['streaming_share']*100:.1f}%)")
+        return "\n".join(lines)
+
+
+def build_report(cap: TraceCapture, model: str,
+                 skipped: tuple[str, ...] = ()) -> TraceReport:
+    """Freeze a capture registry into a :class:`TraceReport`."""
+    mcfg = cap.cfg.monitor
+    sites = []
+    for acc in cap.sites.values():
+        e = cap.site_energy(acc)
+        eb, ep = e["baseline"], e["proposed"]
+        h_b = acc.counters.get("h_base", 0.0)
+        h_p = acc.counters.get("h_prop", 0.0)
+        v_b = acc.counters.get("v_base", 0.0)
+        v_p = acc.counters.get("v_prop", 0.0)
+        act_red = 1.0 - (h_p + v_p) / max(h_b + v_b, 1e-30)
+        sites.append(SitePower(
+            name=acc.name, kind=acc.kind, shape=acc.shape,
+            calls=acc.calls, sampled_calls=acc.sampled_calls,
+            macs=acc.macs,
+            zero_fraction=acc.zf_sum / max(acc.sampled_calls, 1),
+            activity_reduction=act_red,
+            saving_total=1.0 - ep["total"] / max(eb["total"], 1e-30),
+            saving_streaming=(1.0 - ep["streaming"]
+                              / max(eb["streaming"], 1e-30)),
+            streaming_share=eb["streaming"] / max(eb["total"], 1e-30),
+            energy_base=eb["total"], energy_prop=ep["total"],
+            energy_base_streaming=eb["streaming"],
+            energy_prop_streaming=ep["streaming"]))
+    return TraceReport(
+        model=model,
+        geometry=(mcfg.geometry.rows, mcfg.geometry.cols),
+        bic_segments=tuple(int(s) for s in mcfg.bic_segments),
+        sites=sites, skipped=tuple(skipped))

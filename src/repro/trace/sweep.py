@@ -1,0 +1,196 @@
+"""Trace sweeps: every registry config x SA geometry x BIC segments.
+
+Reproduces the paper's per-layer methodology (Figs. 4/5: per-layer zero
+fraction, activity reduction, power saving; overall table: energy-weighted
+network savings) on *our* workloads -- the LM/MoE/attention/recurrent
+architectures in ``repro.configs`` plus the CNNs of ``repro.apps.cnn`` --
+by tracing real forward/decode executions instead of hand-picked layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bic, monitor, systolic
+
+from .capture import CaptureConfig, TraceCapture
+from .interpret import trace_fn
+from .report import TraceReport, build_report
+
+GEOMETRIES: dict[str, systolic.SAGeometry] = {
+    "paper16": systolic.PAPER_SA,
+    "mxu128": systolic.MXU_SA,
+}
+
+SEGMENTS: dict[str, tuple[int, ...]] = {
+    "mantissa": bic.MANTISSA_ONLY,
+    "mant+exp": bic.MANT_EXP,
+    "full": bic.FULL_BUS,
+    "exponent": bic.EXPONENT_ONLY,
+}
+
+
+def make_capture_config(geometry: str = "paper16",
+                        segments: str = "mantissa",
+                        max_batch: int = 4,
+                        max_calls_per_site: int = 4) -> CaptureConfig:
+    """CaptureConfig from sweep-axis names."""
+    mcfg = monitor.MonitorConfig(geometry=GEOMETRIES[geometry],
+                                 bic_segments=SEGMENTS[segments])
+    return CaptureConfig(monitor=mcfg, max_batch=max_batch,
+                         max_calls_per_site=max_calls_per_site)
+
+
+# ------------------------------------------------------------ model inputs
+def model_inputs(cfg, batch: int = 2, seq: int = 16, seed: int = 0) -> dict:
+    """A deterministic training-style batch for any registry config."""
+    from repro.data.pipeline import DataConfig, make_source
+    src = make_source(cfg, DataConfig(seq_len=seq, global_batch=batch,
+                                      seed=seed))
+    return jax.tree.map(jnp.asarray, src.batch(0))
+
+
+def decode_inputs(cfg, batch: int, pos: int, seed: int = 0) -> dict:
+    """One-token decode-step inputs at position ``pos``."""
+    rng = np.random.default_rng(seed + pos)
+    positions = jnp.full((batch, 1), pos, jnp.int32)
+    if cfg.inputs == "embeds":
+        return {"embeds": jnp.asarray(
+                    rng.standard_normal((batch, 1, cfg.d_model)) * 0.02,
+                    jnp.bfloat16),
+                "positions": jnp.broadcast_to(positions, (3, batch, 1))}
+    if cfg.inputs == "codes":
+        return {"codes": jnp.asarray(
+                    rng.integers(0, cfg.vocab, (batch, cfg.codebooks, 1)),
+                    jnp.int32),
+                "positions": positions}
+    return {"tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32),
+            "positions": positions}
+
+
+# ------------------------------------------------------------------ drivers
+def trace_arch(arch: str, mode: str = "forward", *, batch: int = 2,
+               seq: int = 16, decode_steps: int = 2, smoke: bool = True,
+               cfg: CaptureConfig | None = None, seed: int = 0
+               ) -> TraceReport:
+    """Trace one registry architecture end-to-end.
+
+    mode:
+      forward -- full-sequence forward pass (training-shaped matmuls).
+      decode  -- jitted prefill (untraced) then ``decode_steps`` traced
+                 decode steps; per-site statistics accumulate across steps.
+    """
+    from repro.configs import get_config
+    from repro.models import lm
+
+    cfg = cfg or make_capture_config()
+    acfg = get_config(arch, smoke=smoke)
+    params = lm.init_model(jax.random.key(seed), acfg)
+    cap = TraceCapture(cfg)
+    skipped: list[str] = []
+
+    if mode == "forward":
+        inputs = model_inputs(acfg, batch, seq, seed)
+        # include the output head: the D x V projection is usually the
+        # single largest matmul, and decode mode traces it too
+        fn = lambda p, b: lm.logits_fn(p, acfg,
+                                       lm.apply_model(p, acfg, b)[0])
+        _, sk = trace_fn(fn, params, inputs, emit=cap,
+                         include_conv=cfg.include_conv, name=arch)
+        skipped.extend(sk)
+    elif mode == "decode":
+        cache_len = seq + decode_steps
+        prefill = jax.jit(lm.make_prefill_step(acfg, cache_len=cache_len))
+        pre_batch = model_inputs(acfg, batch, seq, seed)
+        pre_batch.pop("labels", None)
+        _, states = prefill(params, pre_batch)
+        decode = lm.make_decode_step(acfg)
+        for t in range(decode_steps):
+            step_in = decode_inputs(acfg, batch, seq + t, seed)
+            (_, states), sk = trace_fn(decode, params, states, step_in,
+                                       emit=cap,
+                                       include_conv=cfg.include_conv,
+                                       name=arch)
+            skipped.extend(sk)
+    else:
+        raise ValueError(f"unknown trace mode {mode!r}")
+    name = f"{arch}[{mode}]"
+    return build_report(cap, name, tuple(dict.fromkeys(skipped)))
+
+
+def trace_cnn(net: str = "resnet50", *, n_images: int = 1, res: int = 112,
+              cfg: CaptureConfig | None = None, seed: int = 0
+              ) -> TraceReport:
+    """Trace a CNN inference via conv interception (no hand-written
+    im2col): every ``conv_general_dilated`` of the jaxpr is lowered to its
+    SA matmul automatically, including MobileNet's grouped depthwise
+    convs."""
+    from repro.apps.cnn import nets
+
+    cfg = cfg or make_capture_config()
+    fwd = nets.make_forward(net, seed=seed)
+    images = nets.synthetic_images(n_images, res=res, seed=seed + 7)
+    cap = TraceCapture(cfg)
+    _, skipped = trace_fn(fwd, images, emit=cap,
+                          include_conv=cfg.include_conv, name=net)
+    return build_report(cap, f"{net}[{res}px]", tuple(skipped))
+
+
+# -------------------------------------------------------------------- sweep
+@dataclasses.dataclass
+class SweepCell:
+    model: str
+    geometry: str
+    segments: str
+    report: TraceReport
+
+    def row(self) -> dict:
+        return {"model": self.model, "geometry": self.geometry,
+                "segments": self.segments, **self.report.summary()}
+
+
+def run_sweep(archs: tuple[str, ...] = ("qwen1.5-0.5b",),
+              nets: tuple[str, ...] = (),
+              geometries: tuple[str, ...] = ("paper16", "mxu128"),
+              segments: tuple[str, ...] = ("mantissa",),
+              mode: str = "forward", batch: int = 2, seq: int = 16,
+              res: int = 112, seed: int = 0) -> list[SweepCell]:
+    """Trace every (model x geometry x BIC-segments) cell.
+
+    Each cell re-interprets the model from scratch: caching the discovered
+    operands across cells would be faster (only the per-site costing
+    depends on geometry/segments) but keeps every traced operand alive on
+    host, which for CNN traces at full resolution is gigabytes -- this is
+    offline analysis, so we trade wall-clock for bounded memory."""
+    cells = []
+    for geom in geometries:
+        for seg in segments:
+            ccfg = make_capture_config(geom, seg)
+            for arch in archs:
+                rep = trace_arch(arch, mode, batch=batch, seq=seq,
+                                 cfg=ccfg, seed=seed)
+                cells.append(SweepCell(arch, geom, seg, rep))
+            for net in nets:
+                rep = trace_cnn(net, res=res, cfg=ccfg, seed=seed)
+                cells.append(SweepCell(net, geom, seg, rep))
+    return cells
+
+
+def format_sweep(cells: list[SweepCell]) -> str:
+    hdr = (f"{'model':26s} {'geom':8s} {'bic':9s} {'sites':>5s} "
+           f"{'zero%':>6s} {'stream-save%':>12s} {'total-save%':>11s} "
+           f"{'stream-share%':>13s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        s = c.report.summary()
+        lines.append(
+            f"{c.model:26s} {c.geometry:8s} {c.segments:9s} "
+            f"{s['n_sites']:5d} {s['mean_zero_fraction']*100:6.1f} "
+            f"{s['streaming_saving']*100:12.1f} "
+            f"{s['total_saving']*100:11.1f} "
+            f"{s['streaming_share']*100:13.1f}")
+    return "\n".join(lines)

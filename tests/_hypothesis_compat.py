@@ -1,0 +1,46 @@
+"""Install-or-skip shim for hypothesis.
+
+Property-based tests use hypothesis when it is installed (see
+requirements-dev.txt); on environments without it, importing this module
+still succeeds and ``@given(...)``-decorated tests are collected as
+SKIPPED instead of the whole module failing at import time. Plain tests in
+the same modules keep running either way.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Accepts any strategy-construction call; never executed."""
+
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return None
+            return make
+
+    st = _StrategyStub()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # replace with a zero-arg stub so pytest does not try to
+            # resolve the property arguments as fixtures
+            @pytest.mark.skip(
+                reason="hypothesis not installed "
+                       "(pip install -r requirements-dev.txt)")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

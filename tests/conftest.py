@@ -1,0 +1,10 @@
+"""Test bootstrap: make ``repro`` (src layout) and sibling test helpers
+importable regardless of how pytest is invoked."""
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+for _p in (_SRC, _HERE):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

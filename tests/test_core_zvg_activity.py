@@ -1,7 +1,7 @@
 """Unit + property tests for zero-value gating and activity accounting."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import activity, bits as B, zvg
 

@@ -19,8 +19,8 @@ from repro.runtime import sharding as sh
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(model=1)    # (data=1, model=1) on one CPU device
 
 
 # ------------------------------------------------------------- sharding

@@ -1,0 +1,258 @@
+"""Tests for repro.trace: jaxpr interception vs hand-wired monitoring.
+
+The load-bearing property: for the same operands and the same sampling
+caps, the tracer's per-site counters must equal direct
+``sa_stream_report`` / ``sa_power`` calls -- the tracer is discovery +
+bookkeeping, never a different power model.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import monitor, power, systolic
+from repro.trace import (CaptureConfig, TraceCapture, TraceReport,
+                         build_report, trace_calls, trace_fn, trace_model)
+from repro.trace.interpret import conv_operands_3d, dot_operands_3d
+
+RNG = np.random.default_rng(0)
+
+# generous caps: nothing in these tests is sub-sampled unless stated
+BIG = CaptureConfig(
+    monitor=monitor.MonitorConfig(max_rows=4096, max_cols=4096,
+                                  max_depth=4096),
+    max_batch=64, max_calls_per_site=64)
+
+
+def _arr(*shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, jnp.float32)
+
+
+# ------------------------------------------------------------ interpreter
+def test_outputs_match_jit():
+    w1, w2 = _arr(16, 32), _arr(32, 8)
+
+    def fn(x):
+        return jax.nn.relu(x @ w1) @ w2
+
+    x = _arr(6, 16)
+    out, skipped = trace_fn(fn, x, emit=lambda s: None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jax.jit(fn)(x)),
+                               rtol=1e-5)
+    assert skipped == []
+
+
+def test_finds_every_dot_with_operands():
+    w1, w2 = _arr(16, 32), _arr(32, 8)
+
+    def fn(x):
+        return jax.nn.relu(x @ w1) @ w2
+
+    x = _arr(6, 16)
+    sites = []
+    trace_fn(fn, x, emit=sites.append, name="f")
+    assert len(sites) == 2
+    np.testing.assert_array_equal(np.asarray(sites[0].lhs[0]),
+                                  np.asarray(x))
+    h = jax.nn.relu(x @ w1)
+    np.testing.assert_allclose(np.asarray(sites[1].lhs[0]),
+                               np.asarray(h), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(sites[1].rhs[0]),
+                                  np.asarray(w2))
+
+
+def test_scan_is_unrolled_per_iteration():
+    ws = _arr(3, 8, 8)
+
+    def fn(x):
+        def body(c, w):
+            return jnp.tanh(c @ w), ()
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    sites = []
+    trace_fn(fn, _arr(4, 8), emit=sites.append)
+    assert len(sites) == 3
+    # iteration index is part of the site name -> stable distinct sites
+    assert len({s.name for s in sites}) == 3
+    for i, s in enumerate(sites):
+        np.testing.assert_array_equal(np.asarray(s.rhs[0]),
+                                      np.asarray(ws[i]))
+
+
+def test_batched_dot_general_shapes():
+    a, b = _arr(5, 7, 4), _arr(5, 4, 3)
+    A, W = dot_operands_3d(a, b, (((2,), (1,)), ((0,), (0,))))
+    assert A.shape == (5, 7, 4) and W.shape == (5, 4, 3)
+    got = jnp.einsum("bmk,bkn->bmn", A, W)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.einsum("bmk,bkn->bmn", a, b)),
+                               rtol=1e-5)
+
+
+def test_conv_lowering_reproduces_conv():
+    x = _arr(2, 8, 8, 5)
+    w = _arr(3, 3, 5, 7)
+
+    def fn(x):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    sites = []
+    out, _ = trace_fn(fn, x, emit=sites.append)
+    (site,) = sites
+    assert site.kind == "conv"
+    y = (site.lhs[0] @ site.rhs[0]).reshape(out.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(out),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_conv_lowering():
+    c = 6
+    x = _arr(1, 8, 8, c)
+    w = _arr(3, 3, 1, c)
+
+    def fn(x):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c)
+
+    sites = []
+    out, _ = trace_fn(fn, x, emit=sites.append)
+    (site,) = sites
+    assert site.kind == "dwconv"
+    assert site.shape == (c, 64, 9, 1)
+    y = jnp.einsum("gmk,gkn->gmn", site.lhs, site.rhs)   # [C, M, 1]
+    y = jnp.moveaxis(y[..., 0], 0, -1).reshape(out.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(out),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------- counters vs hand-wired
+def test_traced_counters_match_direct_stream_report():
+    w1, w2 = _arr(16, 32), _arr(32, 8)
+
+    def fn(x):
+        return jax.nn.relu(x @ w1) @ w2
+
+    x = _arr(6, 16)
+    rep = trace_model(fn, x, name="two_matmul", cfg=BIG)
+    assert len(rep.sites) == 2
+
+    mcfg = BIG.monitor
+    h = jax.nn.relu(x @ w1)
+    direct = []
+    for a, w in ((x, w1), (h, w2)):
+        r = systolic.sa_stream_report(a, w, mcfg.geometry,
+                                      tuple(mcfg.bic_segments), mcfg.zvg)
+        direct.append(power.sa_power(r))
+    by_order = sorted(rep.sites, key=lambda s: s.name)
+    for site, pw in zip(by_order, direct):
+        np.testing.assert_allclose(site.energy_base,
+                                   float(pw["baseline"]["total"]),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(site.energy_prop,
+                                   float(pw["proposed"]["total"]),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(site.saving_total,
+                                   float(pw["saving_total"]), atol=1e-6)
+
+    agg = rep.aggregate()
+    want = power.aggregate_savings(direct)
+    for k in ("total_saving", "streaming_saving", "streaming_share"):
+        np.testing.assert_allclose(agg[k], want[k], atol=1e-6)
+
+
+def test_call_accumulation_and_extrapolation():
+    w = _arr(8, 8)
+
+    def fn(x):
+        return x @ w
+
+    cfg = CaptureConfig(monitor=BIG.monitor, max_batch=64,
+                        max_calls_per_site=2)
+    xs = [(_arr(4, 8),) for _ in range(5)]
+    rep = trace_calls(fn, xs, name="rep", cfg=cfg)
+    (site,) = rep.sites
+    assert site.calls == 5
+    assert site.sampled_calls == 2
+    # energy extrapolates over unsampled calls: ~5/2 x the 2-call sum
+    one = trace_calls(fn, xs[:2], name="rep", cfg=cfg).sites[0]
+    np.testing.assert_allclose(site.energy_base, one.energy_base * 2.5,
+                               rtol=1e-6)
+
+
+# ------------------------------------------------------------- LM tracing
+def test_lm_smoke_trace_site_count_and_names():
+    from repro import trace as T
+    rep = T.trace_arch("qwen1.5-0.5b", "forward", batch=2, seq=16)
+    # 2 scanned groups x (wq wk wv wo + 2 attention einsums + 3 mlp)
+    # + the lm_head projection = 19
+    assert len(rep.sites) == 19, [s.name for s in rep.sites]
+    names = " ".join(s.name for s in rep.sites)
+    for frag in ("attn/wq", "attn/wk", "attn/wv", "attn/wo", "mlp",
+                 "scan[0]", "scan[1]", "lm_head"):
+        assert frag in names, frag
+    agg = rep.aggregate()
+    assert 0.0 < agg["streaming_saving"] < 1.0
+    assert 0.0 < agg["streaming_share"] < 1.0
+
+
+def test_lm_decode_trace_accumulates_sites():
+    from repro import trace as T
+    rep = T.trace_arch("qwen1.5-0.5b", "decode", batch=2, seq=8,
+                       decode_steps=3)
+    assert all(s.calls == 3 for s in rep.sites)
+    assert any("lm_head" in s.name for s in rep.sites)
+
+
+# ---------------------------------------------------------- serialization
+def test_json_roundtrip(tmp_path):
+    w = _arr(8, 12)
+    rep = trace_model(lambda x: x @ w, _arr(4, 8), name="rt", cfg=BIG)
+    path = str(tmp_path / "rep.json")
+    rep.to_json(path)
+    back = TraceReport.from_json(path)
+    assert back.model == rep.model
+    assert back.geometry == rep.geometry
+    assert len(back.sites) == len(rep.sites)
+    for a, b in zip(rep.sites, back.sites):
+        assert a.name == b.name and a.shape == b.shape
+        np.testing.assert_allclose(a.energy_base, b.energy_base)
+    for k, v in rep.summary().items():
+        got = back.summary()[k]
+        if isinstance(v, float):
+            np.testing.assert_allclose(got, v)
+        else:
+            assert got == v
+
+
+def test_csv_export(tmp_path):
+    w = _arr(8, 12)
+    rep = trace_model(lambda x: x @ w, _arr(4, 8), name="rt", cfg=BIG)
+    path = str(tmp_path / "rep.csv")
+    rep.to_csv(path)
+    lines = open(path).read().strip().splitlines()
+    assert len(lines) == 2 and lines[0].startswith("name,kind")
+
+
+# -------------------------------------------------------- monitor sampling
+def test_subsample_covers_tail():
+    # rows 768.. are all-zero; the old arange(cap)*stride sampling (stride
+    # = 1000 // 256 = 3) never looked past row 765 and reported ~0 zeros
+    x = np.ones((1000, 16), np.float32)
+    x[768:] = 0.0
+    m = monitor.monitor_matmul(jnp.asarray(x), _arr(16, 4))
+    assert float(m["zero_fraction"]) == pytest.approx(232 / 1000, abs=0.02)
+    assert float(m["sample_m"]) == 256
+    assert float(m["full_m"]) == 1000
+
+
+def test_monitor_matmul_reports_sample_sizes():
+    m = monitor.monitor_matmul(_arr(10, 2000), _arr(2000, 300))
+    assert float(m["sample_k"]) == 1024
+    assert float(m["full_k"]) == 2000
+    assert float(m["sample_n"]) == 256
+    assert float(m["sample_m"]) == 10
