@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test trace-smoke bench-quick ci
+.PHONY: test trace-smoke serve-smoke bench-quick ci
 
 # tier-1: the whole test suite, fail fast
 test:
@@ -14,6 +14,13 @@ test:
 trace-smoke:
 	$(PY) -m benchmarks.trace_full_model --quick
 
-bench-quick: trace-smoke
+# end-to-end smoke of the serving engine (scheduler -> slots -> sampling
+# -> per-request power reports) on the smallest config
+serve-smoke:
+	$(PY) examples/serve_lm.py --requests 6 --slots 2 --cache-len 48 \
+	    --max-prompt 16 --max-new 8
 
-ci: test trace-smoke
+bench-quick: trace-smoke
+	$(PY) -m benchmarks.serve_throughput --quick
+
+ci: test trace-smoke serve-smoke

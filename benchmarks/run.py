@@ -1,34 +1,57 @@
 """Benchmark suite entry point: one module per paper table/figure, plus the
-LM-framework roofline summary. Prints ``name,us_per_call,derived`` CSV rows
-interleaved with commentary lines (prefixed '#').
+LM-framework roofline summary and the serving-engine benchmark. Prints
+``name,us_per_call,derived`` CSV rows interleaved with commentary lines
+(prefixed '#').
+
+Runnable both ways:
+  python -m benchmarks.run --all            # as a module
+  python benchmarks/run.py --all            # as a script (path set up here)
+Use ``--only <name> [...]`` for a subset, ``--list`` to enumerate, and
+``--quick`` to pass the CI-smoke flag to the suites that support one.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import traceback
 
-from . import (activity_reduction, bic_variants, fig2_distributions,
-               fig45_per_layer, overall_savings, overhead_scaling,
-               power_monitor_lm, trace_full_model)
+if __package__ in (None, ""):                 # script invocation: put the
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_ROOT, "src"))   # repo root + src on
+    sys.path.insert(0, _ROOT)                        # the path ourselves
 
-SUITES = [
-    ("fig2_distributions", fig2_distributions.main),
-    ("bic_variants", bic_variants.main),
-    ("fig45_per_layer", fig45_per_layer.main),
-    ("overall_savings", overall_savings.main),
-    ("overhead_scaling", overhead_scaling.main),
-    ("activity_reduction", activity_reduction.main),
-    ("power_monitor_lm", power_monitor_lm.main),
-    ("trace_full_model", trace_full_model.main),
-]
+from benchmarks import (activity_reduction, bic_variants, fig2_distributions,
+                        fig45_per_layer, overall_savings, overhead_scaling,
+                        power_monitor_lm, serve_throughput, trace_full_model)
+
+#: name -> (main fn, accepts quick=...). EVERY benchmark module must be
+#: registered here -- tests/test_serve_engine.py asserts the registry
+#: matches the modules on disk so `--all` really runs everything.
+SUITES = {
+    "fig2_distributions": (fig2_distributions.main, False),
+    "bic_variants": (bic_variants.main, False),
+    "fig45_per_layer": (fig45_per_layer.main, False),
+    "overall_savings": (overall_savings.main, False),
+    "overhead_scaling": (overhead_scaling.main, False),
+    "activity_reduction": (activity_reduction.main, False),
+    "power_monitor_lm": (power_monitor_lm.main, False),
+    "trace_full_model": (trace_full_model.main, True),
+    "serve_throughput": (serve_throughput.main, True),
+}
 
 
-def main() -> None:
+def run_suites(names: list[str], quick: bool = False) -> int:
+    """Run the named suites; returns the number of failures."""
+    failures = 0
     print("name,us_per_call,derived")
-    for name, fn in SUITES:
+    for name in names:
+        fn, has_quick = SUITES[name]
         print(f"# ===== {name} =====")
         try:
-            fn()
+            fn(quick=quick) if has_quick else fn()
         except Exception:                                # noqa: BLE001
+            failures += 1
             print(f"# {name} FAILED:")
             traceback.print_exc()
     # roofline summary appended if dry-run results exist
@@ -38,7 +61,28 @@ def main() -> None:
         roofline.print_summary()
     except Exception:                                    # noqa: BLE001
         print("# roofline summary unavailable (run repro.launch.dryrun)")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true",
+                    help="run every registered suite (default when no "
+                         "--only is given)")
+    ap.add_argument("--only", nargs="+", choices=sorted(SUITES),
+                    metavar="NAME", help="run only these suites")
+    ap.add_argument("--quick", action="store_true",
+                    help="pass the smoke flag to suites that support one")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered suites and exit")
+    args = ap.parse_args(argv)
+    if args.list:
+        for name in SUITES:
+            print(name)
+        return 0
+    names = args.only if args.only else list(SUITES)
+    return run_suites(names, quick=args.quick)
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(min(main(), 1))

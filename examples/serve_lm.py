@@ -1,59 +1,85 @@
-"""Serving example: batched prefill + autoregressive decode with KV caches,
-demonstrating the serve path every decode-shape dry-run cell exercises.
+"""Serving driver: a mixed workload through the continuous-batching engine.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py --tokens 32
+Submits ``--requests`` requests with randomized prompt lengths, token
+budgets and sampling parameters (half greedy, half temperature+top-k),
+pumps ``ServeEngine.step()`` until the queue drains, and prints one line
+per retired request -- tokens generated, finish reason, and the request's
+own BIC + ZVG streaming-power report -- plus engine-level throughput,
+occupancy, and the serve-wide paper-style power aggregate.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --requests 16
 """
 import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SMOKES
 from repro.models import lm
+from repro.serve import SamplingParams, ServeConfig, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=96)
+    ap.add_argument("--max-prompt", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--no-power", action="store_true",
+                    help="skip per-request power accounting")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = SMOKES[args.arch]
     params = lm.init_model(jax.random.key(0), cfg)
-    cache_len = args.prompt_len + args.tokens
-    prefill = jax.jit(lm.make_prefill_step(cfg, cache_len=cache_len))
-    decode = jax.jit(lm.make_decode_step(cfg))
+    engine = ServeEngine(params, cfg, ServeConfig(
+        max_slots=args.slots, cache_len=args.cache_len,
+        power_monitor=not args.no_power, seed=args.seed))
 
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab,
-                                       (args.batch, args.prompt_len)))
-    t0 = time.perf_counter()
-    logits, states = prefill(params, {"tokens": prompts})
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        prompt = list(rng.integers(0, cfg.vocab,
+                                   int(rng.integers(2, args.max_prompt))))
+        samp = (SamplingParams() if i % 2 == 0 else
+                SamplingParams(temperature=0.8, top_k=20))
+        engine.submit(prompt, max_new_tokens=int(rng.integers(4, args.max_new)),
+                      sampling=samp)
 
-    generated = []
-    tok = jnp.argmax(logits, axis=-1)[:, None]
+    print(f"arch={cfg.name} (reduced config), slots={args.slots}, "
+          f"cache_len={args.cache_len}, requests={args.requests}")
     t0 = time.perf_counter()
-    for i in range(args.tokens):
-        pos = jnp.full((args.batch, 1), args.prompt_len + i, jnp.int32)
-        logits, states = decode(params, states,
-                                {"tokens": tok, "positions": pos})
-        tok = jnp.argmax(logits, axis=-1)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(generated[-1])
+    finished = engine.run()
     dt = time.perf_counter() - t0
 
-    out = jnp.concatenate(generated, axis=1)
-    print(f"arch={cfg.name} (reduced config), batch={args.batch}")
-    print(f"prefill {args.prompt_len} tokens: {t_prefill*1e3:.0f} ms")
-    print(f"decode  {args.tokens} steps: {dt/args.tokens*1e3:.1f} ms/token "
-          f"({args.batch*args.tokens/dt:.0f} tok/s)")
-    print(f"sample continuation ids: {np.asarray(out[0, :10])}")
+    hdr = (f"{'req':>4s} {'prompt':>6s} {'new':>4s} {'reason':8s} "
+           f"{'slot':>4s}")
+    if not args.no_power:
+        hdr += f" {'save%':>6s} {'stream-save%':>12s} {'zero%':>6s}"
+    print(hdr)
+    for r in sorted(finished, key=lambda r: r.uid):
+        line = (f"{r.uid:4d} {r.prompt_len:6d} {len(r.generated):4d} "
+                f"{r.finish_reason:8s} {r.slot:4d}")
+        if r.power is not None:
+            line += (f" {r.power.saving_total * 100:6.2f} "
+                     f"{r.power.saving_streaming * 100:12.2f} "
+                     f"{r.power.zero_fraction * 100:6.1f}")
+        print(line)
+
+    st = engine.stats
+    print(f"\n{len(finished)} requests in {st['steps']} engine steps "
+          f"({st['decode_steps']} decode steps, "
+          f"mean occupancy {engine.occupancy():.2f}/{args.slots} slots)")
+    print(f"{st['tokens']} tokens in {dt:.2f}s = {st['tokens'] / dt:.0f} "
+          f"tok/s (includes compile)")
+    if not args.no_power:
+        agg = engine.trace_report().summary()
+        print(f"serve-wide (energy-weighted): "
+              f"{agg['total_saving'] * 100:.2f}% total / "
+              f"{agg['streaming_saving'] * 100:.2f}% streaming saving, "
+              f"zero fraction {agg['mean_zero_fraction'] * 100:.1f}%")
 
 
 if __name__ == "__main__":

@@ -8,11 +8,18 @@ paper's ASIC-level insight is surfaced inside a production training/serving
 stack: it answers "what would this layer's data streaming cost, and how much
 would selective encoding save" for real workload tensors.
 
-Two entry points:
+Three entry points:
 
 * :func:`monitor_streams` -- pre-shaped ``[M, K] x [K, N]`` operands in,
   raw activity counters + full power breakdown out. This is the primitive
   the model-wide tracer (:mod:`repro.trace`) builds on.
+* :func:`stream_counters` -- same operands, but the output is a FLAT dict
+  of scalar energy/toggle counters (``eb_*``/``ep_*``/``h_*``/``v_*``).
+  Flat scalars are what incremental accumulators want: they add across
+  calls, scale by sampling factors, and cross the device->host boundary
+  cheaply. Both :class:`repro.trace.capture.TraceCapture` (per matmul
+  site) and :class:`repro.serve.power.PowerAccountant` (per served
+  request, per decode step) are sums of ``stream_counters`` outputs.
 * :func:`monitor_matmul` -- convenience wrapper that reshapes/sub-samples
   arbitrary ``[..., K]`` activations and returns the headline ratios (plus
   the sample sizes actually used).
@@ -110,6 +117,72 @@ def monitor_streams(A: jax.Array, W: jax.Array,
         A, W, cfg.geometry, tuple(cfg.bic_segments), cfg.zvg)
     pw = power.sa_power(rep)
     return {"report": rep, "power": pw}
+
+
+#: per-design energy components tracked by :func:`stream_counters`
+#: (matches :func:`repro.core.power.sa_power` output keys)
+BASE_COMPONENTS = ("streaming", "clock", "control", "mult", "add", "acc",
+                   "unload", "total")
+PROP_COMPONENTS = BASE_COMPONENTS + ("overhead",)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def stream_counters(A: jax.Array, W: jax.Array,
+                    cfg: MonitorConfig = DEFAULT_MONITOR) -> dict:
+    """Flat scalar counters for one pre-shaped ``[M,K] x [K,N]`` stream.
+
+    The additive form of :func:`monitor_streams`: ``eb_<c>``/``ep_<c>`` are
+    baseline/proposed energies per component (fJ), ``h_*``/``v_*`` the
+    horizontal/vertical pipeline toggle counts, plus ``cycles`` and the
+    (non-additive) ``zero_fraction``. Summing these dicts over calls --
+    optionally scaled back up by a sampled-fraction -- and only THEN taking
+    ratios implements the paper's energy-before-ratios aggregation rule
+    incrementally, which is how per-step accumulation (serving) stays
+    consistent with whole-call tracing.
+    """
+    out = monitor_streams(A, W, cfg)
+    rep, pw = out["report"], out["power"]
+    flat = {f"eb_{k}": pw["baseline"][k] for k in BASE_COMPONENTS}
+    flat.update({f"ep_{k}": pw["proposed"][k] for k in PROP_COMPONENTS})
+    flat.update({
+        "h_base": rep["h_reg_toggles_base"],
+        "h_prop": rep["h_reg_toggles_prop"],
+        "v_base": rep["v_reg_toggles_base"],
+        "v_prop": rep["v_reg_toggles_prop"],
+        "cycles": rep["cycles"],
+        "zero_fraction": rep["zero_fraction"],
+    })
+    return flat
+
+
+def sampled_fraction_scale(m: int, k: int, n: int,
+                           cfg: MonitorConfig = DEFAULT_MONITOR,
+                           sampled_m: int | None = None) -> float:
+    """Factor that scales counters of sub-sampled ``[ms,ks] x [ks,ns]``
+    operands back to the full ``[m,k] x [k,n]`` extent. Every tracked
+    counter grows ~linearly in each of M, K and N, so one multiplicative
+    factor keeps totals extensive and savings ratios exact (they are
+    energy quotients). The single authority for this rule -- both
+    :mod:`repro.trace.capture` and :mod:`repro.serve.power` use it.
+
+    ``sampled_m`` overrides the default ``min(m, max_rows)`` for callers
+    that pre-sample rows to their own (e.g. power-of-two) budget.
+    """
+    ms = min(m, cfg.max_rows) if sampled_m is None else sampled_m
+    ks = min(k, cfg.max_depth)
+    ns = min(n, cfg.max_cols)
+    return (m / ms) * (k / ks) * (n / ns)
+
+
+def counters_to_energy(counters: dict, scale: float = 1.0) -> dict:
+    """Shape accumulated flat counters like ``power.sa_power`` output
+    (``{"baseline": {...}, "proposed": {...}}``) so they aggregate with
+    :func:`repro.core.power.aggregate_savings`."""
+    base = {k: float(counters.get(f"eb_{k}", 0.0)) * scale
+            for k in BASE_COMPONENTS}
+    prop = {k: float(counters.get(f"ep_{k}", 0.0)) * scale
+            for k in PROP_COMPONENTS}
+    return {"baseline": base, "proposed": prop}
 
 
 @partial(jax.jit, static_argnames=("cfg",))

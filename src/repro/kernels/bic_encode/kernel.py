@@ -18,8 +18,11 @@ associative, so the whole recurrence is an ``associative_scan`` over
 (f(0), f(1)) pairs -- O(log T) depth, fully vectorized across lanes. The
 d_t values themselves are embarrassingly parallel (shifted-input trick).
 
-This is the DESIGN.md "hardware adaptation" in action: the ASIC encoder is a
-tiny serial circuit; the TPU equivalent is a data-parallel scan.
+This is the DESIGN.md "hardware adaptation" in action (docs/kernels.md): the
+ASIC encoder is a tiny serial circuit wired into the weight bus; the TPU
+equivalent is a data-parallel scan over the same stream, producing the SAME
+transmitted bits -- so toggle counts measured on the kernel's output equal
+the ones the paper's encoder would produce, at MXU-friendly throughput.
 
 Grid/VMEM: blocks of (TB, LB) with the T axis as the sequential minor grid
 dimension; a (1, LB) scratch carries the boolean state across T blocks.

@@ -1,7 +1,10 @@
 """Pallas TPU kernel: streaming bit-transition counter.
 
 Counts per-lane Hamming transitions of a ``uint16[T, L]`` stream -- the inner
-loop of all switching-activity accounting. The stream is tiled into
+loop of all switching-activity accounting (docs/kernels.md): every register
+on an SA stream's path sees the same value sequence time-shifted, so these
+per-stream transition counts, multiplied by path length, ARE the paper's
+pipeline toggle totals (no cycle-level simulation). The stream is tiled into
 ``(TB, LB)`` VMEM blocks; the cross-block boundary term is handled by feeding
 the kernel a one-row-shifted copy of the input (no carry needed), and the
 per-lane totals are accumulated in the revisited output block across the

@@ -8,6 +8,15 @@ MXU pass and the accumulator update for that tile (``@pl.when``), saving both
 compute energy and VMEM<->MXU traffic. ReLU-sparse CNN activations and
 token-dropped MoE dispatch buffers hit this path in practice.
 
+The ``@pl.when`` tile-gating caveat (docs/kernels.md): this is a COARSE
+realization of ZVG, not the paper's per-PE, per-cycle gating. Savings
+materialize only when an entire [BM, BK] activation tile is zero, and what
+is saved is the MXU pass + operand traffic -- not the per-flop clock load
+the ASIC gates. The fine-grained proposal is quantified by the analytic
+model (``repro.core.systolic`` + ``repro.core.power``); this kernel is what
+survives of it on stock hardware. The ``gated`` output is the tile-granular
+analogue of the paper's gated-slot counter.
+
 Dataflow: classic output-stationary tiling, grid = (M/BM, N/BN, K/BK) with K
 as the sequential minor axis; an f32 VMEM scratch accumulates the (BM, BN)
 output tile across the K sweep (numerically identical to a dense matmul --

@@ -251,6 +251,33 @@ def make_train_step(cfg: ArchConfig, optimizer, constrain: Constrain = _id,
     return train_step
 
 
+def pick_monitor_weights(params) -> list[tuple[str, jax.Array]]:
+    """Representative layer-0 weights for power monitoring: the first
+    input projection of the first block (whatever the mixer family calls
+    it), plus the FFN up projection when the block has one. The single
+    selection rule shared by train-step monitoring (:func:`_monitor_metrics`)
+    and the serving engine's per-request accountant -- so serving power
+    reports and training power metrics always watch the same sites."""
+    groups = params["stack"]["groups"]
+    if jax.tree.leaves(groups):
+        blk = jax.tree.map(lambda a: a[0], groups)["b0"]
+    else:                                       # unrolled-only stacks
+        blk = (params["stack"]["head"] or params["stack"]["tail"])[0]
+    out = []
+    mix = blk["mixer"]
+    for wname in ("wq", "in_x", "up", "w_dkv"):
+        if wname in mix:
+            w = mix[wname].value
+            if w.ndim == 3:
+                w = w.reshape(w.shape[0], -1)
+            out.append((f"layer0/{wname}", w))
+            break
+    ffn = blk.get("ffn")
+    if ffn is not None and "up" in ffn:
+        out.append(("layer0/ffn_up", ffn["up"].value))
+    return out
+
+
 def _monitor_metrics(params, cfg: ArchConfig, batch) -> dict:
     """Paper's PowerMonitor on representative (activation, weight) pairs:
     the embedded inputs against layer-0 projection weights, streamed
@@ -258,14 +285,7 @@ def _monitor_metrics(params, cfg: ArchConfig, batch) -> dict:
     monitor, systolic = _pm_monitor, _pm_systolic
     x, _ = embed_inputs(params, cfg, batch)
     x2 = x.reshape(-1, x.shape[-1])[:256]
-    g0 = jax.tree.map(lambda a: a[0], params["stack"]["groups"])
-    mix = g0["b0"]["mixer"]
-    for wname in ("wq", "in_x", "up", "w_dkv"):
-        if wname in mix:
-            w = mix[wname].value
-            if w.ndim == 3:
-                w = w.reshape(w.shape[0], -1)
-            break
+    (_, w), *_ = pick_monitor_weights(params)
     mcfg = monitor.MonitorConfig(geometry=systolic.MXU_SA)
     m = monitor.monitor_matmul(x2, w[:, :256], mcfg)
     return {f"power/{k}": v for k, v in m.items()
@@ -339,6 +359,32 @@ def make_prefill_step(cfg: ArchConfig, cache_len: int,
         return logits, states
 
     return prefill_step
+
+
+def make_slot_prefill_step(cfg: ArchConfig, cache_len: int,
+                           constrain: Constrain = _id):
+    """(params, inputs, length) -> (logits at ``length-1``, states).
+
+    Prefill for the serving engine's slot admission: ``inputs`` carries a
+    *right-padded* prompt of static bucket length ``S >= length`` (a traced
+    scalar), and the returned logits are taken at the last REAL position,
+    not the last padded one. Causality makes right padding safe for the
+    cache too: position ``p``'s hidden state never reads positions ``> p``,
+    and every padded cache row is overwritten by a decode write before any
+    later step's mask admits it. (Recurrent mixers carry state *through*
+    padded tokens, so they require ``S == length``; the engine buckets only
+    attention-family architectures.)
+    """
+    def slot_prefill_step(params, inputs, length):
+        h, states, _ = apply_model(params, cfg, inputs, prefill=True,
+                                   cache_len=cache_len,
+                                   constrain=constrain)
+        h_last = jax.lax.dynamic_slice_in_dim(
+            h, jnp.maximum(length - 1, 0), 1, axis=1)[:, 0]
+        logits = logits_fn(params, cfg, h_last)
+        return logits, states
+
+    return slot_prefill_step
 
 
 def make_decode_step(cfg: ArchConfig, constrain: Constrain = _id):

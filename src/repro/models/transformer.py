@@ -13,7 +13,9 @@ Execution modes (one code path each, shared params):
               latent caches / recurrent states), stacked [G, ...].
 
 Positions: ``[B, S]`` int32 (``[3, B, S]`` for M-RoPE). Decode steps use
-S=1 positions; cache writes use the (uniform) position of batch row 0.
+S=1 positions; cache writes are *per batch row* (row i writes at
+``positions[i, 0]``), which is what lets ``repro.serve`` co-batch requests
+sitting at different sequence positions in one shared decode step.
 """
 from __future__ import annotations
 
@@ -115,15 +117,11 @@ def make_block(key, cfg: ArchConfig, spec: str) -> dict:
 
 
 # ------------------------------------------------------------------- helpers
-def _decode_write_pos(cfg: ArchConfig, positions) -> jax.Array:
-    """Scalar cache-write index for a decode step (uniform across batch)."""
-    p = positions[0] if cfg.pos == "mrope" else positions
-    return p[0, 0].astype(jnp.int32)
-
-
 def _decode_batch_pos(cfg: ArchConfig, positions) -> jax.Array:
+    """Per-row cache-write index for a decode step, ``[B]`` int32. Rows may
+    sit at different positions (continuous batching)."""
     p = positions[0] if cfg.pos == "mrope" else positions
-    return p[:, 0]
+    return p[:, 0].astype(jnp.int32)
 
 
 def _rope_qk(cfg: ArchConfig, q, k, positions):
@@ -162,27 +160,21 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
     q, k = _rope_qk(cfg, q, k, positions)
 
     if state is not None:                       # ---- single-token decode
-        wpos = _decode_write_pos(cfg, positions)
         bpos = _decode_batch_pos(cfg, positions)
+        rows = jnp.arange(b)
         if local:
             kc, vc, slots = state
             w_sz = kc.shape[1]
-            slot = wpos % w_sz
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                kc, k.astype(kc.dtype), slot, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                vc, v.astype(vc.dtype), slot, axis=1)
-            slots = jax.lax.dynamic_update_slice_in_dim(
-                slots, jnp.broadcast_to(bpos[:, None], (b, 1)).astype(
-                    slots.dtype), slot, axis=1)
+            slot = bpos % w_sz
+            kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
+            slots = slots.at[rows, slot].set(bpos.astype(slots.dtype))
             out = _ring_decode(q, kc, vc, slots, bpos, cfg, scale)
             new_state = (kc, vc, slots)
         else:
             kc, vc = state
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                kc, k.astype(kc.dtype), wpos, axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                vc, v.astype(vc.dtype), wpos, axis=1)
+            kc = kc.at[rows, bpos].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[rows, bpos].set(v[:, 0].astype(vc.dtype))
             out = A.decode_attention(q, kc, vc, bpos + 1, scale=scale,
                                      softcap=cfg.attn_softcap,
                                      constrain_q=cfg.pos != "mrope")
@@ -265,12 +257,10 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
 
     if state is not None:                       # ---- absorbed decode
         ckv_c, kr_c = state
-        wpos = _decode_write_pos(cfg, positions)
         bpos = _decode_batch_pos(cfg, positions)
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            ckv_c, ckv.astype(ckv_c.dtype), wpos, axis=1)
-        kr_c = jax.lax.dynamic_update_slice_in_dim(
-            kr_c, kr[:, :, 0].astype(kr_c.dtype), wpos, axis=1)
+        rows = jnp.arange(b)
+        ckv_c = ckv_c.at[rows, bpos].set(ckv[:, 0].astype(ckv_c.dtype))
+        kr_c = kr_c.at[rows, bpos].set(kr[:, 0, 0].astype(kr_c.dtype))
         q_eff = jnp.einsum("bshe,rhe->bshr", q_nope,
                            p["w_uk"].value.astype(x.dtype))
         # keep the absorbed query latent-sharded like the cache so the

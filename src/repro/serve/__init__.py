@@ -1,0 +1,31 @@
+"""repro.serve -- continuous-batching LM serving with power accounting.
+
+The serving counterpart to :mod:`repro.launch` (training) and
+:mod:`repro.trace` (whole-model power tracing): a request queue + FIFO
+scheduler admits variable-length prompts into one shared decode batch of
+KV-cache slots; retired requests optionally carry a per-request BIC + ZVG
+streaming-power report computed over the operand streams that request
+actually produced. See docs/serving.md for the quickstart and scheduler
+semantics.
+
+    from repro.serve import Request, SamplingParams, ServeConfig, ServeEngine
+
+    engine = ServeEngine(params, cfg, ServeConfig(max_slots=8,
+                                                  cache_len=256,
+                                                  power_monitor=True))
+    engine.submit([1, 2, 3], max_new_tokens=32)
+    finished = engine.run()
+    print(finished[0].power.summary())
+"""
+from .cache import SlotCache                                  # noqa: F401
+from .engine import ServeConfig, ServeEngine                  # noqa: F401
+from .power import PowerAccountant, RequestPowerReport        # noqa: F401
+from .request import Request, RequestStatus                   # noqa: F401
+from .sampling import GREEDY, SamplingParams, sample_tokens   # noqa: F401
+from .scheduler import FIFOScheduler                          # noqa: F401
+
+__all__ = [
+    "FIFOScheduler", "GREEDY", "PowerAccountant", "Request",
+    "RequestPowerReport", "RequestStatus", "SamplingParams",
+    "ServeConfig", "ServeEngine", "SlotCache", "sample_tokens",
+]

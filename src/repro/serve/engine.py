@@ -1,0 +1,241 @@
+"""ServeEngine: continuous-batching LM serving with power accounting.
+
+The engine owns one shared decode batch of ``max_slots`` KV-cache slots and
+pumps it with :meth:`ServeEngine.step`:
+
+  1. **admit** -- while a slot is free and the queue is non-empty, prefill
+     the next request (batch-1, prompt right-padded to a shape bucket so
+     mixed lengths reuse a handful of compiles), scatter its states into
+     the free slot, and sample its first token from the prefill logits;
+  2. **decode** -- one shared decode step over all ``max_slots`` rows, each
+     live slot at its own position (dead rows compute garbage that nothing
+     reads); per-request sampling parameters are ``[B]`` arrays, so greedy
+     and stochastic requests co-batch without recompiling;
+  3. **retire** -- EOS / token budget / cache horizon, in slot order; the
+     freed slot is available to the very next step's admission phase.
+
+Per-row decode outputs depend only on that row's cache and position (every
+batched op in the decode path is row-independent), so a request's tokens
+are bit-identical whether it runs alone or co-batched -- the invariant
+``tests/test_serve_engine.py`` pins down.
+
+Power accounting (optional): each admitted request carries a
+:class:`repro.serve.power.PowerAccountant` slot that accumulates BIC + ZVG
+streaming counters over the request's OWN operand streams -- its real
+prompt rows at prefill, its embedded decode inputs each step, streamed
+against representative layer-0 weights -- and retirement attaches a
+:class:`RequestPowerReport` answering "what would the paper's technique
+have saved on this request".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import monitor as pm_monitor
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.models.transformer import parse_spec
+
+from . import sampling
+from .cache import SlotCache
+from .power import PowerAccountant
+from .request import Request, RequestStatus
+from .scheduler import FIFOScheduler
+
+#: mixers whose decode reads the cache strictly by position mask, making
+#: right-padded prefill exact (see lm.make_slot_prefill_step); recurrent
+#: mixers carry state through pad tokens and "local" rings can evict real
+#: tokens, so those archs prefill at exact prompt length instead
+_PAD_SAFE_MIXERS = frozenset({"attn", "mla"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine knobs (not architecture)."""
+    max_slots: int = 4            # decode batch width = max concurrency
+    cache_len: int = 128          # KV positions per slot
+    eos_id: int | None = None     # retire when a request samples this token
+    seed: int = 0                 # sampling PRNG seed
+    prompt_buckets: tuple[int, ...] = ()   # explicit prefill shape buckets
+    power_monitor: bool = False   # per-request BIC+ZVG power reports
+    monitor: pm_monitor.MonitorConfig = pm_monitor.DEFAULT_MONITOR
+    power_sample_every: int = 1   # stream every k-th decode step
+
+
+class ServeEngine:
+    """Continuous-batching serving over one model + one slot cache."""
+
+    def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
+        if cfg.inputs != "tokens":
+            raise ValueError(
+                f"ServeEngine serves token LMs; {cfg.name} has "
+                f"inputs={cfg.inputs!r}")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.cache = SlotCache(cfg, scfg.max_slots, scfg.cache_len,
+                               dtype=jnp.dtype(cfg.compute_dtype))
+        self.scheduler = FIFOScheduler(scfg.cache_len)
+        self._prefill = jax.jit(
+            lm.make_slot_prefill_step(cfg, scfg.cache_len))
+        self._decode = jax.jit(lm.make_decode_step(cfg))
+        self._running: dict[int, Request] = {}
+        self._temp = np.zeros(scfg.max_slots, np.float32)
+        self._topk = np.zeros(scfg.max_slots, np.int32)
+        self._key = jax.random.key(scfg.seed)
+        mixers = {parse_spec(s)[0]
+                  for s in (*cfg.pattern, *cfg.head, *cfg.tail)}
+        self._pad_safe = mixers <= _PAD_SAFE_MIXERS
+        self.accountant = (PowerAccountant(scfg.monitor,
+                                           scfg.power_sample_every)
+                           if scfg.power_monitor else None)
+        self._power_weights = (lm.pick_monitor_weights(params)
+                               if scfg.power_monitor else [])
+        self.stats = {"steps": 0, "decode_steps": 0, "tokens": 0,
+                      "occupancy_sum": 0, "peak_live": 0}
+
+    # -------------------------------------------------------------- submit
+    def submit(self, req: Request | list[int], **kw) -> Request:
+        """Queue a request (or a bare prompt, with Request kwargs)."""
+        if isinstance(req, Request):
+            if kw:
+                raise TypeError(
+                    f"keyword arguments {sorted(kw)} are ignored when "
+                    f"submitting a Request instance; set them on the "
+                    f"Request itself")
+        else:
+            req = Request(prompt=list(req), **kw)
+        req = self.scheduler.submit(req)
+        req.submit_step = self.stats["steps"]
+        return req
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """One engine iteration: admit, one shared decode, retire.
+        Returns the requests retired during this step."""
+        retired: list[Request] = []
+        while self.cache.n_free and self.scheduler.n_pending:
+            req = self.scheduler.pop_admissible(1)[0]
+            self._admit(req)
+            self._maybe_retire(req, retired)   # max_new == 1 / prompt EOS
+
+        live = self.cache.live_slots()
+        if live:
+            inputs = self.cache.decode_inputs()
+            if self.accountant is not None and self.accountant.tick(live):
+                x, _ = lm.embed_inputs(self.params, self.cfg, inputs)
+                for site, w in self._power_weights:
+                    self.accountant.record_decode(live, x[:, 0], w, site)
+                self.accountant.mark_sampled(live)
+            logits, self.cache.states = self._decode(
+                self.params, self.cache.states, inputs)
+            self._key, sub = jax.random.split(self._key)
+            toks = np.asarray(jax.device_get(sampling.sample_tokens(
+                sub, logits, jnp.asarray(self._temp),
+                jnp.asarray(self._topk))))
+            for slot in live:
+                req = self._running[slot]
+                tok = int(toks[slot])
+                self.cache.advance(slot, tok)
+                req.generated.append(tok)
+                self.stats["tokens"] += 1
+                self._maybe_retire(req, retired)
+            self.stats["decode_steps"] += 1
+            self.stats["occupancy_sum"] += len(live)
+            self.stats["peak_live"] = max(self.stats["peak_live"],
+                                          len(live))
+        self.stats["steps"] += 1
+        return retired
+
+    def run(self, max_steps: int = 0) -> list[Request]:
+        """Pump :meth:`step` until queue and slots drain (or max_steps)."""
+        finished: list[Request] = []
+        while self.scheduler.n_pending or self.cache.n_live:
+            finished.extend(self.step())
+            if max_steps and self.stats["steps"] >= max_steps:
+                break
+        return finished
+
+    # ------------------------------------------------------------ internals
+    def _bucket(self, length: int) -> int:
+        """Static prefill length for a prompt: explicit buckets if given,
+        else next power of two. Architectures that are not pad-safe
+        (recurrent state through pad tokens, local-attention ring
+        eviction) ALWAYS prefill at exact length -- explicit buckets must
+        not override correctness."""
+        if not self._pad_safe:
+            return length
+        if self.scfg.prompt_buckets:
+            for b in sorted(self.scfg.prompt_buckets):
+                if b >= length:
+                    return min(b, self.scfg.cache_len - 1)
+        bucket = 1
+        while bucket < length:
+            bucket *= 2
+        return min(bucket, self.scfg.cache_len - 1)
+
+    def _admit(self, req: Request) -> None:
+        slot = self.cache.allocate()
+        req.slot = slot
+        req.status = RequestStatus.RUNNING
+        req.start_step = self.stats["steps"]
+        length = req.prompt_len
+        bucket = max(self._bucket(length), length)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :length] = req.prompt
+        logits, states1 = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, np.int32(length))
+        self._temp[slot] = req.sampling.temperature
+        self._topk[slot] = req.sampling.top_k
+        self._key, sub = jax.random.split(self._key)
+        first = int(jax.device_get(sampling.sample_tokens(
+            sub, logits, jnp.full((1,), req.sampling.temperature,
+                                  jnp.float32),
+            jnp.full((1,), req.sampling.top_k, jnp.int32)))[0])
+        self.cache.write_prefill(slot, states1, first, length)
+        req.generated.append(first)
+        self.stats["tokens"] += 1
+        self._running[slot] = req
+        if self.accountant is not None:
+            self.accountant.begin(slot, req.uid, length)
+            prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
+            x, _ = lm.embed_inputs(self.params, self.cfg,
+                                   {"tokens": prompt})
+            for site, w in self._power_weights:
+                self.accountant.record_prefill(slot, x, w, site)
+
+    def _maybe_retire(self, req: Request, retired: list[Request]) -> None:
+        reason = self.scheduler.retire_reason(
+            req, int(self.cache.positions[req.slot]), self.scfg.eos_id)
+        if not reason:
+            return
+        slot = req.slot
+        if self.accountant is not None:
+            req.power = self.accountant.finish(slot, len(req.generated))
+        self.cache.release(slot)
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+        self._running.pop(slot)
+        req.status = RequestStatus.FINISHED
+        req.finish_reason = reason
+        req.finish_step = self.stats["steps"]
+        retired.append(req)
+
+    # -------------------------------------------------------------- views
+    def trace_report(self):
+        """Serve-wide paper-style TraceReport over all monitored traffic
+        (requires power_monitor=True)."""
+        if self.accountant is None:
+            raise RuntimeError("power_monitor is off")
+        from repro.trace.report import build_report
+        return build_report(self.accountant.capture,
+                            model=f"serve/{self.cfg.name}")
+
+    def occupancy(self) -> float:
+        """Mean live slots per decode step (batch efficiency)."""
+        d = max(self.stats["decode_steps"], 1)
+        return self.stats["occupancy_sum"] / d

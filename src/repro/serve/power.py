@@ -1,0 +1,260 @@
+"""Per-request streaming-power accounting for the serving engine.
+
+The question PR 1's tracer could not answer: *what does the paper's
+BIC + ZVG save per served request*, over the operand streams that request
+actually produced -- its own prompt at prefill, its own sampled tokens at
+every decode step, with the switching statistics of serving traffic rather
+than training batches.
+
+Mechanism: the engine hands the accountant one (activations, weight)
+operand pair per monitored site per decode step -- activations ``[B, K]``
+with one row per KV slot. A single jitted+vmapped ``stream_counters`` call
+models all rows at once; rows of live slots are credited to the request
+occupying that slot, scaled back to the full operand extent exactly like
+:mod:`repro.trace.capture` scales sampled operands. Counters accumulate as
+flat host-side floats per (slot, site); retirement freezes them into a
+:class:`RequestPowerReport` whose ratios are computed energies-first (the
+paper's aggregation rule). At retirement the request's (extrapolated)
+per-site counters are ALSO booked into a :class:`repro.trace.TraceCapture`
+keyed by site name, so the engine can emit a serve-wide paper-style report
+with the identical machinery that traces training models -- and, because
+both views are frozen from the same per-request sums, request-level
+energies add up to the serve-wide aggregate exactly, at ANY sampling
+cadence (the serve-wide report therefore covers *retired* requests).
+
+Sampling cadence: with ``sample_every = k`` only every k-th decode step is
+streamed through the SA model; retirement extrapolates decode-site
+energies by ``steps / sampled_steps`` (the same stationarity argument as
+capture's ``max_calls_per_site``). Ratios are unaffected; energies are
+estimates marked by ``sampled_steps < decode_steps`` in the report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+
+from repro.core import monitor
+from repro.trace.capture import CaptureConfig, TraceCapture
+
+
+@partial(jax.jit, static_argnames=("mcfg",))
+def _rows_counters(A: jax.Array, W: jax.Array,
+                   mcfg: monitor.MonitorConfig) -> dict:
+    """Per-row flat counters: ``A [B, K]`` rows each streamed against
+    ``W [K, N]``. Returns a dict of ``[B]`` arrays."""
+    def one(a):
+        a2, w2 = monitor.subsample_operands(a[None, :], W, mcfg)
+        return monitor.stream_counters(a2, w2, mcfg)
+
+    return jax.vmap(one)(A)
+
+
+@dataclasses.dataclass
+class RequestPowerReport:
+    """Frozen power outcome of one retired request (energies in fJ,
+    extrapolated to the full operand extent and all decode steps)."""
+    uid: int
+    prompt_tokens: int
+    new_tokens: int
+    decode_steps: int          # decode steps this request was live for
+    sampled_steps: int         # of which were streamed through the model
+    energy: dict               # {"baseline": {...}, "proposed": {...}}
+    zero_fraction: float       # mean over sampled (site, step) records
+    sites: tuple[str, ...]     # monitored site names
+
+    @property
+    def saving_total(self) -> float:
+        b = self.energy["baseline"]["total"]
+        return 1.0 - self.energy["proposed"]["total"] / max(b, 1e-30)
+
+    @property
+    def saving_streaming(self) -> float:
+        b = self.energy["baseline"]["streaming"]
+        return 1.0 - self.energy["proposed"]["streaming"] / max(b, 1e-30)
+
+    @property
+    def streaming_share(self) -> float:
+        return (self.energy["baseline"]["streaming"]
+                / max(self.energy["baseline"]["total"], 1e-30))
+
+    def summary(self) -> dict:
+        return {
+            "prompt_tokens": self.prompt_tokens,
+            "new_tokens": self.new_tokens,
+            "sampled_steps": self.sampled_steps,
+            "saving_total": self.saving_total,
+            "saving_streaming": self.saving_streaming,
+            "streaming_share": self.streaming_share,
+            "zero_fraction": self.zero_fraction,
+            "energy_base_fj": self.energy["baseline"]["total"],
+            "energy_prop_fj": self.energy["proposed"]["total"],
+        }
+
+
+class _SiteRec:
+    """Summed flat counters for one (slot, site), plus the site's operand
+    shape ``(B, M, K, N)`` so retirement can book honest MAC counts."""
+
+    def __init__(self, shape: tuple[int, int, int, int]):
+        self.shape = shape
+        self.counters: dict[str, float] = {}
+        self.zf_sum = 0.0
+        self.zf_n = 0
+
+    def add(self, counters: dict, zf: float):
+        for k, v in counters.items():
+            self.counters[k] = self.counters.get(k, 0.0) + v
+        self.zf_sum += zf
+        self.zf_n += 1
+
+    @property
+    def zf_mean(self) -> float:
+        return self.zf_sum / max(self.zf_n, 1)
+
+
+class _SlotAcc:
+    """Mutable per-slot accumulator while its request is live."""
+
+    def __init__(self, uid: int, prompt_tokens: int):
+        self.uid = uid
+        self.prompt_tokens = prompt_tokens
+        self.decode_steps = 0
+        self.sampled_steps = 0
+        self.due = False           # current step is sampled for this slot
+        # site -> _SiteRec; decode sites extrapolate at finish
+        self.prefill: dict[str, _SiteRec] = {}
+        self.decode: dict[str, _SiteRec] = {}
+
+
+class PowerAccountant:
+    """Per-slot incremental accounting, one live request per slot."""
+
+    def __init__(self, mcfg: monitor.MonitorConfig = monitor.DEFAULT_MONITOR,
+                 sample_every: int = 1):
+        if sample_every < 1:
+            raise ValueError(f"sample_every must be >= 1: {sample_every}")
+        self.mcfg = mcfg
+        self.sample_every = sample_every
+        self._global_step = 0
+        self._slots: dict[int, _SlotAcc] = {}
+        # serve-wide registry (paper-style report over ALL traffic)
+        self.capture = TraceCapture(CaptureConfig(monitor=mcfg))
+
+    # ----------------------------------------------------------- lifecycle
+    def begin(self, slot: int, uid: int, prompt_tokens: int) -> None:
+        self._slots[slot] = _SlotAcc(uid, prompt_tokens)
+
+    def finish(self, slot: int, new_tokens: int) -> RequestPowerReport:
+        """Freeze the slot's sums into a report AND book the same frozen,
+        extrapolated per-site counters into the serve-wide capture (one
+        record_counters call per site per request, so capture totals equal
+        the sum of retired requests' reports by construction)."""
+        acc = self._slots.pop(slot)
+        scale = acc.decode_steps / max(acc.sampled_steps, 1)
+        total: dict[str, float] = {}
+        zf_sum = zf_n = 0.0
+        for site, rec in acc.prefill.items():
+            for k, v in rec.counters.items():
+                total[k] = total.get(k, 0.0) + v
+            zf_sum += rec.zf_sum
+            zf_n += rec.zf_n
+            self.capture.record_counters(
+                site, "dot_general", rec.shape,
+                {**rec.counters, "zero_fraction": rec.zf_mean})
+        for site, rec in acc.decode.items():
+            scaled = {k: v * scale for k, v in rec.counters.items()}
+            for k, v in scaled.items():
+                total[k] = total.get(k, 0.0) + v
+            zf_sum += rec.zf_sum
+            zf_n += rec.zf_n
+            # MACs extrapolate with the energies: all decode steps count
+            shape = (acc.decode_steps,) + rec.shape[1:]
+            self.capture.record_counters(
+                site, "dot_general", shape,
+                {**scaled, "zero_fraction": rec.zf_mean})
+        return RequestPowerReport(
+            uid=acc.uid, prompt_tokens=acc.prompt_tokens,
+            new_tokens=new_tokens, decode_steps=acc.decode_steps,
+            sampled_steps=acc.sampled_steps,
+            energy=monitor.counters_to_energy(total),
+            zero_fraction=zf_sum / max(zf_n, 1),
+            sites=tuple(sorted(set(acc.prefill) | set(acc.decode))))
+
+    # ----------------------------------------------------------- recording
+    def record_prefill(self, slot: int, acts: jax.Array, weight: jax.Array,
+                       site: str) -> None:
+        """One prefill matmul for the slot's request: ``acts [..., K]`` (the
+        request's real prompt rows only -- no padding), ``weight [K, N]``."""
+        A = acts.reshape(-1, acts.shape[-1])
+        m = A.shape[0]
+        # pre-sample rows to a power-of-two budget so the jitted stream
+        # model compiles O(log max_rows) shapes total, not one per
+        # distinct prompt length (the accounting analogue of the engine's
+        # prefill buckets); even-stride sampling + back-scaling keeps
+        # ratios exact and totals unbiased
+        ms = 1 << (min(m, self.mcfg.max_rows).bit_length() - 1)
+        a2, w2 = monitor.subsample_operands(
+            monitor._subsample(A, ms, 0), weight, self.mcfg)
+        counters = {k: float(v) for k, v in jax.device_get(
+            monitor.stream_counters(a2, w2, self.mcfg)).items()}
+        zf = counters.pop("zero_fraction")
+        factor = monitor.sampled_fraction_scale(
+            m, A.shape[1], weight.shape[1], self.mcfg, sampled_m=ms)
+        scaled = {k: v * factor for k, v in counters.items()}
+        acc = self._slots[slot]
+        rec = acc.prefill.setdefault(
+            f"prefill/{site}",
+            _SiteRec((1, A.shape[0], A.shape[1], weight.shape[1])))
+        rec.add(scaled, zf)
+
+    def tick(self, slots: list[int]) -> bool:
+        """Advance live slots by one decode step; True when this step
+        should be sampled (engine then calls :meth:`record_decode`).
+
+        The cadence is keyed to the GLOBAL decode-step counter -- not
+        per-request -- so staggered admissions cannot phase-shift every
+        step into being due and the accounting work really runs ~1/k of
+        the time. A request's first decode step is always sampled, so
+        short-lived requests admitted between sample points still get a
+        decode energy estimate.
+        """
+        self._global_step += 1
+        due_global = (self._global_step - 1) % self.sample_every == 0
+        sample = False
+        for s in slots:
+            acc = self._slots[s]
+            acc.decode_steps += 1
+            acc.due = due_global or acc.decode_steps == 1
+            sample = sample or acc.due
+        return sample
+
+    def record_decode(self, slots: list[int], acts: jax.Array,
+                      weight: jax.Array, site: str) -> None:
+        """One decode-step matmul across the whole batch: ``acts [B, K]``
+        (row per KV slot), ``weight [K, N]``. Only rows in ``slots`` are
+        credited; the step must have been announced with :meth:`tick`."""
+        per_row = jax.device_get(_rows_counters(acts, weight, self.mcfg))
+        for s in slots:
+            acc = self._slots[s]
+            if not acc.due:
+                continue
+            row = {k: float(v[s]) for k, v in per_row.items()}
+            zf = row.pop("zero_fraction")
+            factor = monitor.sampled_fraction_scale(
+                1, acts.shape[1], weight.shape[1], self.mcfg)
+            scaled = {k: v * factor for k, v in row.items()}
+            rec = acc.decode.setdefault(
+                f"decode/{site}",
+                _SiteRec((1, 1, acts.shape[1], weight.shape[1])))
+            rec.add(scaled, zf)
+
+    def mark_sampled(self, slots: list[int]) -> None:
+        """Book that this step's records covered these slots (called once
+        per sampled step, after the per-site record_decode calls)."""
+        for s in slots:
+            acc = self._slots[s]
+            if acc.due:
+                acc.sampled_steps += 1
+

@@ -1,0 +1,74 @@
+"""Request lifecycle for the serving engine.
+
+A :class:`Request` is the unit of work: a prompt, a token budget, sampling
+parameters, and -- once retired -- the generated tokens plus an optional
+per-request streaming-power report (what the paper's BIC + ZVG would have
+saved on *this request's* actual operand streams).
+
+Lifecycle: QUEUED -> RUNNING (admitted into a KV-cache slot, prefill done)
+-> FINISHED (EOS / token budget / cache horizon). The engine never mutates
+a request after retirement, so retired requests are safe to hand across
+threads / collect into result lists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from .sampling import SamplingParams
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    Attributes:
+      prompt: prompt token ids (at least 1; the engine does not tokenize).
+      max_new_tokens: decode budget, >= 1.
+      sampling: per-request sampling parameters (greedy by default).
+      uid: engine-assigned id (submission order) once submitted.
+    """
+    prompt: list[int]
+    max_new_tokens: int = 16
+    sampling: SamplingParams = SamplingParams()
+    uid: int = -1
+
+    # ---- engine-owned state --------------------------------------------
+    status: RequestStatus = RequestStatus.QUEUED
+    slot: int = -1                 # KV-cache slot once admitted (kept after
+                                   # retirement for occupancy analysis)
+    generated: list[int] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""        # "eos" | "length" | "cache"
+    submit_step: int = -1          # engine step counters (set by the
+    start_step: int = -1           # engine): queueing delay is
+    finish_step: int = -1          # start_step - submit_step
+    power: "object | None" = None  # RequestPowerReport when accounting is on
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.status is RequestStatus.FINISHED
+
+    def summary(self) -> dict:
+        """Plain-dict view for logging / JSON."""
+        out = {
+            "uid": self.uid,
+            "prompt_tokens": self.prompt_len,
+            "new_tokens": len(self.generated),
+            "finish_reason": self.finish_reason,
+            "slot": self.slot,
+            "steps": (self.finish_step - self.start_step
+                      if self.finish_step >= 0 else -1),
+        }
+        if self.power is not None:
+            out["power"] = self.power.summary()
+        return out

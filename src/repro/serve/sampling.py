@@ -1,0 +1,61 @@
+"""Token sampling for the serving engine: greedy / temperature / top-k.
+
+One jit-compiled, batch-vectorized kernel serves every co-batched request
+regardless of its individual parameters: temperature and top-k enter as
+``[B]`` arrays, so a greedy request (temperature 0) and a top-k-40 request
+share the same decode step without recompilation. Greedy rows take the
+argmax path exactly (no epsilon-temperature trick -- ties must resolve
+identically to a plain ``argmax`` for the co-batching equivalence tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling parameters.
+
+    temperature: 0 => greedy (argmax); > 0 => softmax sampling at that
+      temperature.
+    top_k: 0 => no truncation; k > 0 restricts sampling to the k highest
+      logits (ties at the threshold are all kept, matching the usual
+      "logit >= k-th value" definition).
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0: {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0: {self.top_k}")
+
+
+GREEDY = SamplingParams()
+
+
+@jax.jit
+def sample_tokens(key: jax.Array, logits: jax.Array,
+                  temperature: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Sample one token per row. ``logits [B, V]``, params ``[B]`` -> [B].
+
+    Rows with ``temperature == 0`` return ``argmax(logits)`` bit-exactly;
+    other rows apply top-k truncation (if ``top_k > 0``) then categorical
+    sampling at their temperature. One key covers the whole batch --
+    per-row independence comes from categorical's per-row Gumbel draws.
+    """
+    v = logits.shape[-1]
+    # threshold = k-th largest logit per row (k clamped into [1, V])
+    kth = jnp.clip(top_k, 1, v).astype(jnp.int32)
+    sorted_desc = -jnp.sort(-logits, axis=-1)               # [B, V] desc
+    thresh = jnp.take_along_axis(sorted_desc, kth[:, None] - 1, axis=-1)
+    truncate = (top_k > 0)[:, None]
+    masked = jnp.where(truncate & (logits < thresh), -jnp.inf, logits)
+    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, scaled, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(temperature > 0, sampled, greedy).astype(jnp.int32)

@@ -1,0 +1,74 @@
+"""Admission and retirement policy for the serving engine.
+
+FIFO with feasibility checks: a request is admissible when a slot is free
+and its whole worst-case footprint (prompt + max_new_tokens) fits the KV
+cache -- admission never over-commits, so the engine can promise that a
+running request is retired only by EOS or its own token budget, never by
+eviction. Infeasible requests are rejected at submit time (fail fast, not
+after queuing behind hours of traffic).
+
+Retirement checks run after every decode step, in slot order:
+  "eos"    -- the request's newest token equals the engine's EOS id;
+  "length" -- max_new_tokens generated;
+  "cache"  -- the next write position would leave the cache (defense in
+              depth; unreachable when admission validated the footprint).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from .request import Request, RequestStatus
+
+
+class FIFOScheduler:
+    """Order-preserving queue + the admit/retire policy."""
+
+    def __init__(self, cache_len: int):
+        self.cache_len = cache_len
+        self.pending: deque[Request] = deque()
+        self._next_uid = 0
+
+    # ------------------------------------------------------------ submit
+    def submit(self, req: Request) -> Request:
+        if req.prompt_len < 1:
+            raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1: "
+                             f"{req.max_new_tokens}")
+        footprint = req.prompt_len + req.max_new_tokens
+        if footprint > self.cache_len:
+            raise ValueError(
+                f"request needs {footprint} cache positions "
+                f"({req.prompt_len} prompt + {req.max_new_tokens} new) but "
+                f"cache_len is {self.cache_len}")
+        req.uid = self._next_uid
+        self._next_uid += 1
+        req.status = RequestStatus.QUEUED
+        self.pending.append(req)
+        return req
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.pending)
+
+    def pop_admissible(self, n_free_slots: int) -> list[Request]:
+        """Up to ``n_free_slots`` requests, strictly FIFO (no reordering:
+        every queued request was validated to fit, so the head is never
+        blocked by capacity it could not use)."""
+        out = []
+        while self.pending and len(out) < n_free_slots:
+            out.append(self.pending.popleft())
+        return out
+
+    # ------------------------------------------------------------ retire
+    def retire_reason(self, req: Request, position: int,
+                      eos_id: int | None) -> str:
+        """'' while the request should keep decoding."""
+        if (eos_id is not None and req.generated
+                and req.generated[-1] == eos_id):
+            return "eos"
+        if len(req.generated) >= req.max_new_tokens:
+            return "length"
+        if position >= self.cache_len:
+            return "cache"
+        return ""

@@ -30,10 +30,10 @@ from repro.core import monitor
 
 from .interpret import MatmulSite
 
-#: power components tracked per design (matches power.sa_power keys)
-_BASE_KEYS = ("streaming", "clock", "control", "mult", "add", "acc",
-              "unload", "total")
-_PROP_KEYS = _BASE_KEYS + ("overhead",)
+#: power components tracked per design (re-exported for compatibility;
+#: the canonical definitions live next to ``monitor.stream_counters``)
+_BASE_KEYS = monitor.BASE_COMPONENTS
+_PROP_KEYS = monitor.PROP_COMPONENTS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,19 +60,7 @@ def _site_counters(A3: jax.Array, W3: jax.Array,
 
     def one(a, w):
         a2, w2 = monitor.subsample_operands(a, w, mcfg)
-        m = monitor.monitor_streams(a2, w2, mcfg)
-        rep, pw = m["report"], m["power"]
-        out = {f"eb_{k}": pw["baseline"][k] for k in _BASE_KEYS}
-        out.update({f"ep_{k}": pw["proposed"][k] for k in _PROP_KEYS})
-        out.update({
-            "h_base": rep["h_reg_toggles_base"],
-            "h_prop": rep["h_reg_toggles_prop"],
-            "v_base": rep["v_reg_toggles_base"],
-            "v_prop": rep["v_reg_toggles_prop"],
-            "cycles": rep["cycles"],
-            "zero_fraction": rep["zero_fraction"],
-        })
-        return out
+        return monitor.stream_counters(a2, w2, mcfg)
 
     ms = jax.vmap(one)(A3, W3)
     out = {k: v.sum() for k, v in ms.items()}
@@ -130,15 +118,35 @@ class TraceCapture:
                                                  self.cfg.max_batch))
         counters = {key: float(v) for key, v in counters.items()}
         zf = counters.pop("zero_fraction")
-        # scale sampled counters back to the full operand extent; every
-        # tracked counter grows ~linearly in each of B, M, K, N, so one
-        # multiplicative factor keeps totals extensive and ratios exact
+        # scale sampled counters back to the full operand extent (shared
+        # rule: monitor.sampled_fraction_scale), plus the batch dimension
+        # this module additionally sub-samples
         bs = min(b, self.cfg.max_batch)
-        ms = min(m, mcfg.max_rows)
-        ks = min(k, mcfg.max_depth)
-        ns = min(n, mcfg.max_cols)
-        factor = (b / bs) * (m / ms) * (k / ks) * (n / ns)
+        factor = (b / bs) * monitor.sampled_fraction_scale(m, k, n, mcfg)
         acc.add({key: v * factor for key, v in counters.items()}, zf)
+
+    def record_counters(self, name: str, kind: str,
+                        shape: tuple[int, int, int, int],
+                        counters: dict, macs: float | None = None):
+        """Feed one call's pre-computed flat counters into a named site.
+
+        The incremental entry point: callers that already hold
+        ``monitor.stream_counters`` output for an operand pair -- e.g. the
+        serving engine accumulating per decode STEP rather than per traced
+        whole-call -- book it here and get the same SiteStats registry,
+        report building, and energy-before-ratios aggregation as jaxpr
+        tracing. ``counters`` must already be scaled to the full operand
+        extent; ``zero_fraction`` may be present and is averaged.
+        """
+        b, m, k, n = shape
+        acc = self.sites.get(name)
+        if acc is None:
+            acc = self.sites[name] = SiteStats(name, kind, shape)
+        acc.calls += 1
+        acc.macs += float(b) * m * k * n if macs is None else macs
+        counters = dict(counters)
+        zf = float(counters.pop("zero_fraction", 0.0))
+        acc.add({key: float(v) for key, v in counters.items()}, zf)
 
     # -------------------------------------------------------------- views
     def site_energy(self, acc: SiteStats) -> dict:
@@ -146,8 +154,4 @@ class TraceCapture:
         sites aggregate with :func:`repro.core.power.aggregate_savings`;
         extrapolated over unsampled calls."""
         scale = acc.calls / max(acc.sampled_calls, 1)
-        base = {k: acc.counters.get(f"eb_{k}", 0.0) * scale
-                for k in _BASE_KEYS}
-        prop = {k: acc.counters.get(f"ep_{k}", 0.0) * scale
-                for k in _PROP_KEYS}
-        return {"baseline": base, "proposed": prop}
+        return monitor.counters_to_energy(acc.counters, scale)

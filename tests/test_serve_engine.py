@@ -1,0 +1,321 @@
+"""Continuous-batching invariants of repro.serve.
+
+The load-bearing properties:
+  * slots are a fixed pool: retired slots are reused, concurrency never
+    exceeds ``max_slots``, and everything submitted eventually retires;
+  * co-batching is invisible: a request's greedy tokens are identical
+    whether it runs alone, co-batched with other greedy requests, or
+    co-batched with stochastic requests -- and identical to the plain
+    (slot-free, bucket-free) prefill+decode path;
+  * the cache is never over-committed: infeasible requests are rejected
+    at submit, and live positions stay inside ``cache_len``;
+  * per-request power reports are exactly sums of
+    ``monitor.stream_counters`` outputs over the request's own steps
+    (the accountant is bookkeeping, never a different power model), and
+    request-level energies sum to the serve-wide trace aggregate.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core import monitor
+from repro.models import lm
+from repro.serve import (SamplingParams, ServeConfig, ServeEngine,
+                         sample_tokens)
+
+CACHE_LEN = 48
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = SMOKES["qwen1.5-0.5b"].with_(compute_dtype="float32")
+    params = lm.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(n, lo=2, hi=24):
+    return [list(map(int, RNG.integers(0, 256, int(RNG.integers(lo, hi)))))
+            for _ in range(n)]
+
+
+def _engine(model, **kw):
+    cfg, params = model
+    kw.setdefault("cache_len", CACHE_LEN)
+    return ServeEngine(params, cfg, ServeConfig(**kw))
+
+
+# ----------------------------------------------------------- slot lifecycle
+def test_slot_reuse_and_drain(model):
+    eng = _engine(model, max_slots=2)
+    prompts = _prompts(7)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=3)
+    finished = eng.run()
+    assert len(finished) == 7
+    assert all(r.done and len(r.generated) == 3 for r in finished)
+    # 7 admissions through 2 physical slots: retirement must free slots
+    assert eng.cache.allocations == 7
+    assert eng.stats["peak_live"] <= 2
+    assert {r.slot for r in finished} <= {0, 1}
+    assert eng.cache.n_free == 2 and eng.cache.n_live == 0
+
+
+def test_fifo_admission_order(model):
+    eng = _engine(model, max_slots=1)
+    for p in _prompts(4):
+        eng.submit(p, max_new_tokens=2)
+    finished = eng.run()
+    starts = [r.start_step for r in sorted(finished, key=lambda r: r.uid)]
+    assert starts == sorted(starts)
+
+
+# -------------------------------------------------------- co-batch identity
+def test_cobatched_matches_single_request(model):
+    prompts = _prompts(5)
+
+    def run(max_slots):
+        eng = _engine(model, max_slots=max_slots)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=4)
+        return {r.uid: r.generated for r in eng.run()}
+
+    assert run(4) == run(1)
+
+
+def test_engine_matches_plain_decode_path(model):
+    """Bucketed slot prefill + shared decode == the slot-free reference
+    (exercises right-padding exactness and per-row cache writes)."""
+    cfg, params = model
+    prompts = _prompts(3)
+    eng = _engine(model, max_slots=3)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4)
+    got = {r.uid: r.generated for r in eng.run()}
+
+    prefill = jax.jit(lm.make_prefill_step(cfg, cache_len=CACHE_LEN))
+    decode = jax.jit(lm.make_decode_step(cfg))
+    for uid, p in enumerate(prompts):
+        logits, states = prefill(params, {"tokens": np.asarray([p])})
+        toks = [int(np.argmax(np.asarray(logits)[0]))]
+        for i in range(3):
+            pos = np.full((1, 1), len(p) + i, np.int32)
+            logits, states = decode(
+                params, states,
+                {"tokens": np.asarray([[toks[-1]]]), "positions": pos})
+            toks.append(int(np.argmax(np.asarray(logits)[0])))
+        assert got[uid] == toks, uid
+
+
+def test_greedy_rows_unaffected_by_stochastic_neighbors(model):
+    """A greedy request co-batched with temperature/top-k traffic must
+    produce the same tokens as when served alone (row independence of the
+    decode step + key-free argmax path)."""
+    prompts = _prompts(4)
+    solo = _engine(model, max_slots=1)
+    solo.submit(prompts[0], max_new_tokens=5)
+    want = solo.run()[0].generated
+
+    eng = _engine(model, max_slots=4, seed=3)
+    eng.submit(prompts[0], max_new_tokens=5)
+    for p in prompts[1:]:
+        eng.submit(p, max_new_tokens=5,
+                   sampling=SamplingParams(temperature=1.2, top_k=7))
+    finished = {r.uid: r for r in eng.run()}
+    assert finished[0].generated == want
+
+
+# ------------------------------------------------------------ cache safety
+def test_infeasible_request_rejected(model):
+    eng = _engine(model, max_slots=1)
+    with pytest.raises(ValueError, match="cache"):
+        eng.submit(_prompts(1, lo=40, hi=47)[0],
+                   max_new_tokens=CACHE_LEN)   # prompt + new > cache_len
+    with pytest.raises(ValueError):
+        eng.submit([], max_new_tokens=1)
+    with pytest.raises(ValueError):
+        eng.submit([1, 2], max_new_tokens=0)
+
+
+def test_positions_never_exceed_cache(model):
+    eng = _engine(model, max_slots=2)
+    for p in _prompts(4, lo=20, hi=30):
+        eng.submit(p, max_new_tokens=CACHE_LEN - 30)
+    while eng.scheduler.n_pending or eng.cache.n_live:
+        eng.step()
+        live = eng.cache.positions[eng.cache.live]
+        assert (live < CACHE_LEN).all(), live
+
+
+def test_eos_retires_early(model):
+    # run once greedy to learn what the model will emit, then set EOS to
+    # the second generated token and expect retirement right after it
+    probe = _engine(model, max_slots=1)
+    prompt = _prompts(1)[0]
+    probe.submit(prompt, max_new_tokens=6)
+    toks = probe.run()[0].generated
+    eos = toks[2]
+    stop = toks.index(eos)        # first occurrence wins (tokens repeat)
+    eng = _engine(model, max_slots=1, eos_id=eos)
+    eng.submit(prompt, max_new_tokens=6)
+    (r,) = eng.run()
+    assert r.finish_reason == "eos"
+    assert r.generated == toks[:stop + 1]
+
+
+# ------------------------------------------------------------------ power
+def test_power_report_matches_direct_monitor_counters(model):
+    """The accountant is a sum of monitor.stream_counters calls: replaying
+    the retired request's own (token, position) stream through the monitor
+    reproduces the report's energies exactly."""
+    cfg, params = model
+    mcfg = monitor.MonitorConfig(max_rows=4096, max_cols=4096,
+                                 max_depth=4096)   # no subsampling
+    eng = _engine(model, max_slots=1, power_monitor=True, monitor=mcfg)
+    # power-of-two prompt length: the accountant's prefill row bucketing
+    # (compile-count bound) is then a no-op, so the replay is exact
+    prompt = _prompts(1, lo=8, hi=9)[0]
+    eng.submit(prompt, max_new_tokens=5)
+    (r,) = eng.run()
+    assert r.power is not None
+    assert r.power.sampled_steps == r.power.decode_steps == 4
+
+    weights = eng._power_weights
+    assert weights, "engine picked no monitored sites"
+    total = {}
+
+    def add(acts, w):
+        A = acts.reshape(-1, acts.shape[-1])
+        c = jax.device_get(monitor.stream_counters(A, w, mcfg))
+        for k, v in c.items():
+            if k != "zero_fraction":
+                total[k] = total.get(k, 0.0) + float(v)
+
+    x, _ = lm.embed_inputs(params, cfg,
+                           {"tokens": np.asarray([prompt], np.int32)})
+    for _, w in weights:
+        add(x, w)                                    # prefill sites
+    # decode steps consume generated[:-1] at positions L, L+1, ...
+    for i, tok in enumerate(r.generated[:-1]):
+        inp = {"tokens": np.asarray([[tok]], np.int32),
+               "positions": np.full((1, 1), len(prompt) + i, np.int32)}
+        xd, _ = lm.embed_inputs(params, cfg, inp)
+        for _, w in weights:
+            add(xd, w)
+    want = monitor.counters_to_energy(total)
+    for design in ("baseline", "proposed"):
+        for comp, v in want[design].items():
+            np.testing.assert_allclose(
+                r.power.energy[design][comp], v, rtol=1e-5,
+                err_msg=f"{design}/{comp}")
+
+
+def test_request_energies_sum_to_serve_wide_report(model):
+    eng = _engine(model, max_slots=3, power_monitor=True)
+    for p in _prompts(5):
+        eng.submit(p, max_new_tokens=4)
+    finished = eng.run()
+    assert all(r.power is not None for r in finished)
+    base = sum(r.power.energy["baseline"]["total"] for r in finished)
+    prop = sum(r.power.energy["proposed"]["total"] for r in finished)
+    rep = eng.trace_report()
+    np.testing.assert_allclose(sum(s.energy_base for s in rep.sites),
+                               base, rtol=1e-6)
+    np.testing.assert_allclose(sum(s.energy_prop for s in rep.sites),
+                               prop, rtol=1e-6)
+    agg = rep.aggregate()
+    np.testing.assert_allclose(agg["total_saving"], 1.0 - prop / base,
+                               rtol=1e-6)
+
+
+def test_power_sample_every_extrapolates(model):
+    eng = _engine(model, max_slots=2, power_monitor=True,
+                  power_sample_every=3)
+    for p in _prompts(3):
+        eng.submit(p, max_new_tokens=8)
+    finished = eng.run()
+    r = finished[0]
+    assert r.power.decode_steps == 7
+    assert r.power.sampled_steps == 3    # steps 0, 3, 6
+    assert r.power.energy["baseline"]["total"] > 0
+    # request energies sum to the serve-wide report at ANY cadence (both
+    # views are frozen from the same extrapolated per-request counters)
+    rep = eng.trace_report()
+    np.testing.assert_allclose(
+        sum(s.energy_base for s in rep.sites),
+        sum(q.power.energy["baseline"]["total"] for q in finished),
+        rtol=1e-6)
+
+
+def test_explicit_buckets_cannot_break_recurrent_archs():
+    """prompt_buckets must not right-pad architectures whose prefill is
+    not pad-safe (recurrent state flows through pad tokens): the engine
+    ignores buckets there and serves tokens identical to the solo run."""
+    cfg = SMOKES["recurrentgemma-9b"].with_(compute_dtype="float32")
+    params = lm.init_model(jax.random.key(0), cfg)
+    prompts = _prompts(2, lo=3, hi=10)
+
+    def run(max_slots, buckets):
+        eng = ServeEngine(params, cfg, ServeConfig(
+            max_slots=max_slots, cache_len=CACHE_LEN,
+            prompt_buckets=buckets))
+        assert not eng._pad_safe
+        assert eng._bucket(len(prompts[0])) == len(prompts[0])
+        for p in prompts:
+            eng.submit(p, max_new_tokens=3)
+        return {r.uid: r.generated for r in eng.run()}
+
+    assert run(2, (32,)) == run(1, ())
+
+
+# --------------------------------------------------------------- sampling
+def test_sampling_greedy_and_topk1_are_argmax():
+    key = jax.random.key(0)
+    logits = jnp.asarray(RNG.standard_normal((4, 32)), jnp.float32)
+    want = np.argmax(np.asarray(logits), axis=-1)
+    got = sample_tokens(key, logits, jnp.zeros(4), jnp.zeros(4, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), want)
+    got = sample_tokens(key, logits, jnp.full((4,), 2.0),
+                        jnp.ones(4, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_sampling_topk_stays_in_topk_set():
+    logits = jnp.asarray(RNG.standard_normal((2, 64)), jnp.float32)
+    k = 5
+    topk_sets = [set(np.argsort(-np.asarray(logits)[b])[:k])
+                 for b in range(2)]
+    for seed in range(20):
+        got = np.asarray(sample_tokens(
+            jax.random.key(seed), logits, jnp.full((2,), 1.5),
+            jnp.full((2,), k, jnp.int32)))
+        for b in range(2):
+            assert int(got[b]) in topk_sets[b]
+
+
+def test_sampling_params_validate():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+
+
+# ------------------------------------------------------ benchmark registry
+def test_benchmark_registry_is_complete():
+    """`python benchmarks/run.py --all` must really run everything: every
+    benchmark module on disk (except the runner/helpers) is registered."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.run import SUITES
+    bdir = os.path.join(root, "benchmarks")
+    on_disk = {f[:-3] for f in os.listdir(bdir)
+               if f.endswith(".py")} - {"run", "common", "__init__"}
+    assert on_disk == set(SUITES), (
+        f"unregistered: {on_disk - set(SUITES)}; "
+        f"stale: {set(SUITES) - on_disk}")
