@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test trace-smoke serve-smoke bench-quick ci
+.PHONY: test trace-smoke serve-smoke design-smoke bench-quick ci
 
 # tier-1: the whole test suite, fail fast
 test:
@@ -20,7 +20,13 @@ serve-smoke:
 	$(PY) examples/serve_lm.py --requests 6 --slots 2 --cache-len 48 \
 	    --max-prompt 16 --max-new 8
 
+# end-to-end smoke of the design-point API: N-design grid benchmark plus
+# per-site greedy selection over a traced CNN
+design-smoke:
+	$(PY) benchmarks/run.py --quick --only bic_variants
+	$(PY) -m repro.trace --archs '' --nets resnet50 --res 64 --select
+
 bench-quick: trace-smoke
 	$(PY) -m benchmarks.serve_throughput --quick
 
-ci: test trace-smoke serve-smoke
+ci: test trace-smoke serve-smoke design-smoke

@@ -1,19 +1,28 @@
-"""Paper §III.B: BIC segment-choice sweep.
+"""Paper §III.B: BIC segment choice, as a design-grid sweep.
 
 Claim C2: mantissa-only BIC maximizes streaming-toggle savings per encoder
 bit for CNN weight streams; exponent-segment BIC is non-beneficial.
+
+Since the design-point API, each (geometry x north-bus coding) cell is a
+:class:`repro.design.DesignPoint`; one ``evaluate_operands`` pass per
+geometry prices the whole coding column from a single walk over the real
+ResNet50 weight stream. The weight-bus effect is isolated as the
+vertical-pipeline toggle saving vs the uncoded north bus.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import design as D
 from repro.apps.cnn import nets
-from repro.core import activity, bic, bits as B
+from repro.core import bic, systolic
+from repro.trace.sweep import GEOMETRIES
 
 from .common import row, timed
 
-VARIANTS = {
+#: north-bus coding variants (name -> BIC segments; None = uncoded)
+VARIANTS: dict[str, tuple[int, ...] | None] = {
     "none": None,
     "mantissa_only": bic.MANTISSA_ONLY,
     "exponent_only": bic.EXPONENT_ONLY,
@@ -21,43 +30,81 @@ VARIANTS = {
     "mant+exp_segmented": bic.MANT_EXP,
 }
 
+#: encoded bus bits per variant (for the per-encoder-bit efficiency)
+WIDTHS = {"mantissa_only": 7, "exponent_only": 8, "full_bus": 16,
+          "mant+exp_segmented": 15}
 
-def main() -> None:
-    print("# BIC variant sweep on real weight streams (K-axis streaming)")
+
+def _grid(geom: systolic.SAGeometry) -> tuple[D.DesignPoint, ...]:
+    """One design per coding variant (west=ZVG throughout, like the
+    proposed design) plus the fully uncoded baseline reference."""
+    designs = [D.DesignPoint("baseline", geometry=geom)]
+    for name, segs in VARIANTS.items():
+        north = D.NONE if segs is None else D.BIC(segs)
+        designs.append(D.DesignPoint(
+            name.replace("_", "-").replace("+", "."),
+            west=D.ZVG, north=north, geometry=geom))
+    return tuple(designs)
+
+
+def main(quick: bool = False) -> None:
+    print("# BIC variant grid (geometry x north-bus coding) on a real "
+          "ResNet50 weight stream")
     specs = nets.resnet50_specs()
     ws = nets.init_weights(specs)
     # representative large conv, streamed exactly as the SA sees it
     w = ws["s3b1.c2"].reshape(-1, ws["s3b1.c2"].shape[-1])  # [K, N]
-    stream = B.to_bits(jnp.asarray(w, jnp.bfloat16))
-    raw = float(activity.stream_transitions(stream).sum())
+    if quick:
+        w = w[:512, :64]
+    K, N = w.shape
+    # ReLU-sparse synthetic input stream (west edge, ZVG territory)
+    rng = np.random.default_rng(0)
+    A = np.abs(rng.standard_normal((128, K))).astype(np.float32)
+    A[rng.random(A.shape) < 0.55] = 0.0
+    A, W = jnp.asarray(A), jnp.asarray(w)
 
-    results = {}
-    for name, segs in VARIANTS.items():
-        if segs is None:
-            results[name] = raw
-            row("bic_none", 0.0, f"{raw:.0f} toggles")
-            continue
+    geoms = {"paper16": GEOMETRIES["paper16"]} if quick else GEOMETRIES
+    results: dict[tuple[str, str], dict] = {}
+    for gname, geom in geoms.items():
+        designs = _grid(geom)
 
-        def run(segs=segs):
-            return float(bic.bic_transitions(stream, segs).sum())
+        def run(designs=designs):
+            ev = D.evaluate_operands(A, W, designs)
+            return {n: {k: float(r[k]) if k != "energy" else
+                        {c: float(x) for c, x in r[k].items()}
+                        for k in ("energy", "h", "v")} for n, r in ev.items()}
 
-        t, us = timed(run, iters=1)
-        results[name] = t
-        saving = 1 - t / raw
-        row(f"bic_{name}", us, f"saving={saving*100:.2f}%")
+        ev, us = timed(run, iters=1)
+        # one timing row per geometry: the grid is priced by ONE
+        # evaluate_operands pass, so per-variant timings don't exist
+        row(f"bic_{gname}_grid_pass", us,
+            f"{len(designs)} designs priced from one stream pass")
+        v_none = ev["none"]["v"]
+        e_base = ev["baseline"]["energy"]["total"]
+        for name in VARIANTS:
+            cell = name.replace("_", "-").replace("+", ".")
+            v_save = 1.0 - ev[cell]["v"] / max(v_none, 1.0)
+            t_save = 1.0 - ev[cell]["energy"]["total"] / e_base
+            results[(gname, name)] = {"v_save": v_save, "t_save": t_save}
+            row(f"bic_{gname}_{name}", 0.0,
+                f"weight-bus-save={v_save*100:.2f}% "
+                f"total-save={t_save*100:.2f}%")
 
-    best = min(results, key=results.get)
-    mant_ok = (results["mantissa_only"] < raw
-               and results["exponent_only"] >= results["mantissa_only"])
-    print(f"#   best variant: {best}; mantissa-only beneficial and "
-          f">= exponent variant -> C2 "
-          f"{'CONFIRMED' if mant_ok else 'REFUTED'}")
-    # per-encoder-bit efficiency (savings / segment width)
-    for name, width in (("mantissa_only", 7), ("full_bus", 16),
-                        ("exp_mantissa", 15)):
-        if name in results:
-            eff = (raw - results[name]) / raw / width
-            print(f"#   {name}: saving per encoded bit = {eff*100:.3f}%")
+    for gname in geoms:
+        g = {n: results[(gname, n)] for n in VARIANTS}
+        best = max((n for n in VARIANTS if n != "none"),
+                   key=lambda n: g[n]["v_save"])
+        mant_ok = (g["mantissa_only"]["v_save"] > 0
+                   and g["exponent_only"]["v_save"]
+                   <= g["mantissa_only"]["v_save"])
+        print(f"#   [{gname}] best weight-bus variant: {best}; "
+              f"mantissa-only beneficial and >= exponent variant -> C2 "
+              f"{'CONFIRMED' if mant_ok else 'REFUTED'}")
+        # per-encoder-bit efficiency (weight-bus savings / encoded bits)
+        for name, width in WIDTHS.items():
+            eff = g[name]["v_save"] / width
+            print(f"#   [{gname}] {name}: saving per encoded bit = "
+                  f"{eff*100:.3f}%")
 
 
 if __name__ == "__main__":

@@ -30,7 +30,7 @@ from benchmarks import (activity_reduction, bic_variants, fig2_distributions,
 #: matches the modules on disk so `--all` really runs everything.
 SUITES = {
     "fig2_distributions": (fig2_distributions.main, False),
-    "bic_variants": (bic_variants.main, False),
+    "bic_variants": (bic_variants.main, True),
     "fig45_per_layer": (fig45_per_layer.main, False),
     "overall_savings": (overall_savings.main, False),
     "overhead_scaling": (overhead_scaling.main, False),

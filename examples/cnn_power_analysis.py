@@ -8,9 +8,14 @@ automatic jaxpr tracer (repro.trace): no hand-written im2col, every conv is
 intercepted at the XLA-primitive level. The two paths agree to sampling
 tolerance, which is the cross-check that the tracer streams the same
 operands the hand-wired analysis does.
+
+With ``--select``, every layer is priced for the whole named design menu
+(repro.design) in the same stream pass and the cheapest design is chosen
+per layer -- the paper's application-aware selection, automated.
 """
 import argparse
 
+from repro import design
 from repro.apps.cnn import analysis
 
 
@@ -30,23 +35,42 @@ def main():
     ap.add_argument("--trace", action="store_true",
                     help="also run the automatic repro.trace analysis "
                          "and print its per-layer table")
+    ap.add_argument("--select", action="store_true",
+                    help="price the full design menu per layer and pick "
+                         "the cheapest design for each")
     args = ap.parse_args()
 
+    designs = (tuple(design.named_designs().values()) if args.select
+               else ())
     print(f"analyzing {args.net} ({args.images} synthetic image(s), "
           f"16x16 bf16 systolic array)...")
-    layers = analysis.analyze_network(args.net, n_images=args.images)
-    print(f"{'layer':10s} {'zero%':>6s} {'P_base fJ/cyc':>13s} "
-          f"{'P_prop fJ/cyc':>13s} {'saving':>7s}")
+    layers = analysis.analyze_network(args.net, n_images=args.images,
+                                      designs=designs)
+    sel = analysis.select_network(layers) if args.select else None
+    hdr = (f"{'layer':10s} {'zero%':>6s} {'P_base fJ/cyc':>13s} "
+           f"{'P_prop fJ/cyc':>13s} {'saving':>7s}")
+    if sel:
+        hdr += f" {'best design':>12s} {'best%':>6s}"
+    print(hdr)
     for l in layers:
-        print(f"{l.name:10s} {l.zero_fraction*100:6.1f} "
-              f"{l.power_base:13.0f} {l.power_prop:13.0f} "
-              f"{l.saving_total*100:6.1f}%")
+        line = (f"{l.name:10s} {l.zero_fraction*100:6.1f} "
+                f"{l.power_base:13.0f} {l.power_prop:13.0f} "
+                f"{l.saving_total*100:6.1f}%")
+        if sel:
+            line += f" {l.selected:>12s} {l.saving(l.selected)*100:6.1f}%"
+        print(line)
     s = analysis.network_summary(layers)
     print(f"\noverall dynamic power reduction: "
           f"{s['overall_power_reduction']*100:.1f}% "
           f"(paper: {'9.4' if args.net == 'resnet50' else '6.2'}%)")
     print(f"mean streaming-activity reduction: "
           f"{s['mean_activity_reduction']*100:.1f}% (paper avg: 29%)")
+    if sel:
+        ss = sel.summary()
+        print(f"per-layer selection: {ss['saving_selected']*100:.2f}% vs "
+              f"fixed proposed {ss['saving_fixed']*100:.2f}% "
+              f"({ss['n_changed']}/{ss['n_sites']} layers prefer "
+              f"{', '.join(d for d in ss['designs_used'])})")
     if args.trace:
         run_trace(args.net, args.images)
 

@@ -46,3 +46,15 @@ ref = jnp.asarray(A) @ jnp.asarray(W)
 print(f"zero-gated matmul          : max err "
       f"{float(jnp.abs(out - ref).max()):.3f}, "
       f"{int(gated.sum())} tile(s) skipped entirely")
+
+# 3) design points: price the whole named design menu (per-edge coding
+#    combinations) from ONE pass over the same operands
+from repro import design
+ev = design.evaluate_operands(jnp.asarray(A), jnp.asarray(W),
+                              tuple(design.named_designs().values()))
+best = min((n for n in ev if n != "baseline"),
+           key=lambda n: float(ev[n]["energy"]["total"]))
+sv = design.savings(ev)
+print(f"design menu                : best={best} "
+      f"({sv[best]['saving_total']*100:.1f}% vs "
+      f"proposed {sv['proposed']['saving_total']*100:.1f}%)")

@@ -1,8 +1,10 @@
 """Per-layer SA streaming/power analysis of CNN inference (paper Figs. 4/5).
 
 For every lowered matmul of a CNN forward pass, stream the exact operands
-through the systolic-array activity model and evaluate the calibrated power
-model for both the conventional and the proposed (BIC + ZVG) designs.
+through the systolic-array activity model once and price any list of
+:class:`repro.design.DesignPoint`\\ s -- by default the paper pair
+(conventional vs BIC + ZVG), whose numbers the legacy twin fields of
+:class:`LayerPower` carry unchanged.
 
 Depthwise convolutions are analyzed as their true SA mapping: C independent
 [M, 9] x [9, 1] matmuls (vmapped). The padded, mostly-idle array this
@@ -13,9 +15,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
-
+from repro import design as D
 from repro.core import bic, power, systolic
 
 from . import nets
@@ -35,59 +35,86 @@ class LayerPower:
     energy_base: float       # fJ
     energy_prop: float
     streaming_share: float
+    #: per-design totals: {name: {"total", "streaming", "h", "v"}}
+    designs: dict = dataclasses.field(default_factory=dict)
+    reference: str = "baseline"
+    primary: str = "proposed"
+    selected: str = ""
+
+    def saving(self, name: str) -> float:
+        ref = max(float(self.designs[self.reference]["total"]), 1e-30)
+        return 1.0 - float(self.designs[name]["total"]) / ref
 
 
-def _dw_report(A: jax.Array, W: jax.Array, geom, segs) -> dict:
-    """Per-channel vmapped SA reports for a depthwise conv, summed."""
-    M = A.shape[0]
-    k2, C = W.shape
-    Ac = jnp.transpose(A.reshape(M, k2, C), (2, 0, 1))     # [C, M, k2]
-    Wc = jnp.transpose(W)[:, :, None]                      # [C, k2, 1]
-    reports = jax.vmap(
-        lambda a, w: systolic.sa_stream_report(a, w, geom, segs, True)
-    )(Ac, Wc)
-    summed = {k: v.sum() for k, v in reports.items()}
-    # geometry scalars are not additive; restore them
-    for k in ("rows", "cols"):
-        summed[k] = reports[k][0]
-    summed["zero_fraction"] = reports["zero_fraction"].mean()
-    return summed
+def _design_list(geom, segs, em) -> tuple[D.DesignPoint, ...]:
+    return D.paper_pair(geom, tuple(segs), True, em)
 
 
 def analyze_trace(trace: nets.LayerTrace,
                   geom: systolic.SAGeometry = systolic.PAPER_SA,
                   segs: Sequence[int] = bic.MANTISSA_ONLY,
-                  em: power.EnergyModel = power.DEFAULT_ENERGY) -> LayerPower:
+                  em: power.EnergyModel = power.DEFAULT_ENERGY,
+                  designs: Sequence[D.DesignPoint] = ()) -> LayerPower:
+    """Price one traced layer for ``designs`` (default: the paper pair
+    built from ``geom``/``segs``/``em``) from a single stream pass."""
+    designs = tuple(designs) or _design_list(geom, tuple(segs), em)
     if trace.kind == "dwconv":
-        rep = _dw_report(trace.A, trace.W, geom, tuple(segs))
+        M = trace.A.shape[0]
+        k2, C = trace.W.shape
+        Ac = trace.A.reshape(M, k2, C).transpose(2, 0, 1)  # [C, M, k2]
+        Wc = trace.W.T[:, :, None]                          # [C, k2, 1]
+        ev = D.evaluate_batched(Ac, Wc, designs)
     else:
-        rep = systolic.sa_stream_report(trace.A, trace.W, geom, tuple(segs))
-    pw = power.sa_power(rep, em)
-    cyc = max(float(rep["cycles"]), 1.0)
+        ev = D.evaluate_operands(trace.A, trace.W, designs)
+
+    reference, primary = designs[0].name, designs[min(1, len(designs)-1)].name
+    ref, pri = ev[reference], ev[primary]
+    cyc = max(float(ref["cycles"]), 1.0)
+    eb, ep = float(ref["energy"]["total"]), float(pri["energy"]["total"])
+    sb = float(ref["energy"]["streaming"])
+    sp = float(pri["energy"]["streaming"])
+    hv_ref = float(ref["h"]) + float(ref["v"])
+    hv_pri = float(pri["h"]) + float(pri["v"])
     return LayerPower(
         name=trace.name, kind=trace.kind, macs=trace.macs,
-        zero_fraction=float(rep["zero_fraction"]),
-        activity_reduction=float(
-            systolic.streaming_activity_reduction(rep)),
-        power_base=float(pw["baseline"]["total"]) / cyc,
-        power_prop=float(pw["proposed"]["total"]) / cyc,
-        saving_total=float(pw["saving_total"]),
-        saving_streaming=float(pw["saving_streaming"]),
-        energy_base=float(pw["baseline"]["total"]),
-        energy_prop=float(pw["proposed"]["total"]),
-        streaming_share=float(pw["streaming_share_base"]),
-    )
+        zero_fraction=float(ref["zero_fraction"]),
+        activity_reduction=1.0 - hv_pri / max(hv_ref, 1.0),
+        power_base=eb / cyc,
+        power_prop=ep / cyc,
+        saving_total=1.0 - ep / max(eb, 1.0),
+        saving_streaming=1.0 - sp / max(sb, 1.0),
+        energy_base=eb, energy_prop=ep,
+        streaming_share=sb / max(eb, 1e-30),
+        designs={name: {"total": float(r["energy"]["total"]),
+                        "streaming": float(r["energy"]["streaming"]),
+                        "h": float(r["h"]), "v": float(r["v"])}
+                 for name, r in ev.items()},
+        reference=reference, primary=primary)
 
 
 def analyze_network(net: str, n_images: int = 2, seed: int = 0,
                     geom: systolic.SAGeometry = systolic.PAPER_SA,
                     segs: Sequence[int] = bic.MANTISSA_ONLY,
                     em: power.EnergyModel = power.DEFAULT_ENERGY,
+                    designs: Sequence[D.DesignPoint] = (),
                     ) -> list[LayerPower]:
     """Full per-layer analysis of a CNN (paper Figs. 4/5 data)."""
     images = nets.synthetic_images(n_images, seed=seed + 7)
     traces = nets.forward_with_traces(net, images, seed=seed)
-    return [analyze_trace(t, geom, segs, em) for t in traces]
+    return [analyze_trace(t, geom, segs, em, designs) for t in traces]
+
+
+def select_network(layers: list[LayerPower],
+                   candidates: Sequence[str] | None = None) -> D.Selection:
+    """Greedy per-layer design choice over an ``analyze_network`` result
+    (multi-design run required); marks each layer's ``selected``."""
+    sel = D.select_sites({l.name: l.designs for l in layers},
+                         reference=layers[0].reference,
+                         primary=layers[0].primary,
+                         candidates=candidates)
+    for l in layers:
+        l.selected = sel.choices[l.name]
+    return sel
 
 
 def network_summary(layers: list[LayerPower]) -> dict:

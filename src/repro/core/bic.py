@@ -40,6 +40,15 @@ EXPONENT_ONLY: tuple[int, ...] = (int(B.EXP_MASK),)
 #: Segmented BIC over {mantissa, exponent} independently.
 MANT_EXP: tuple[int, ...] = (int(B.MANT_MASK), int(B.EXP_MASK))
 
+#: Canonical CLI/sweep names for the segment variants above (the single
+#: authority; ``repro.trace.sweep`` and the benchmarks alias this).
+NAMED_SEGMENTS: dict[str, tuple[int, ...]] = {
+    "mantissa": MANTISSA_ONLY,
+    "mant+exp": MANT_EXP,
+    "full": FULL_BUS,
+    "exponent": EXPONENT_ONLY,
+}
+
 
 def _check_segments(segments: Segments) -> tuple[int, ...]:
     segs = tuple(int(s) & 0xFFFF for s in segments)

@@ -2,27 +2,29 @@
 
 Any matmul in any supported architecture can be *instrumented*: given the
 (activations, weights) actually flowing through a layer, the monitor models
-streaming that matmul through a systolic array (paper 16x16 or TPU-MXU
-128x128 geometry) and reports the BIC + ZVG power outcome. This is how the
-paper's ASIC-level insight is surfaced inside a production training/serving
-stack: it answers "what would this layer's data streaming cost, and how much
-would selective encoding save" for real workload tensors.
+streaming that matmul through a systolic array and reports the power
+outcome of every :class:`repro.design.DesignPoint` in the config's design
+list -- by default the paper pair (conventional vs BIC+ZVG), but any
+N-design menu works, which is what per-site design selection
+(:mod:`repro.design.select`) builds on.
 
 Three entry points:
 
 * :func:`monitor_streams` -- pre-shaped ``[M, K] x [K, N]`` operands in,
-  raw activity counters + full power breakdown out. This is the primitive
-  the model-wide tracer (:mod:`repro.trace`) builds on.
+  legacy twin-design counters + full power breakdown out (compat wrapper
+  for hand-wired analyses; refuses explicit ``designs`` lists -- those
+  go through :func:`stream_counters`).
 * :func:`stream_counters` -- same operands, but the output is a FLAT dict
-  of scalar energy/toggle counters (``eb_*``/``ep_*``/``h_*``/``v_*``).
+  of scalar energy/toggle counters namespaced by design name
+  (``e/<design>/<component>``, ``h/<design>``, ``v/<design>``).
   Flat scalars are what incremental accumulators want: they add across
   calls, scale by sampling factors, and cross the device->host boundary
   cheaply. Both :class:`repro.trace.capture.TraceCapture` (per matmul
   site) and :class:`repro.serve.power.PowerAccountant` (per served
   request, per decode step) are sums of ``stream_counters`` outputs.
 * :func:`monitor_matmul` -- convenience wrapper that reshapes/sub-samples
-  arbitrary ``[..., K]`` activations and returns the headline ratios (plus
-  the sample sizes actually used).
+  arbitrary ``[..., K]`` activations and returns the headline ratios
+  (primary design vs reference, plus the sample sizes actually used).
 
 All functions are jit-compatible; instrumentation is off unless
 ``TrainConfig.power_monitor`` / ``ServeConfig.power_monitor`` is set, and
@@ -38,17 +40,67 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from typing import TYPE_CHECKING
+
 from . import bic, power, systolic
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.design.point import DesignPoint
+
+# repro.design depends on repro.core (systolic menu, power pricing), and
+# repro.core's package __init__ imports this module -- so the design-API
+# imports here must be lazy to keep both import orders working.
+
+
+def _evaluate_operands(A, W, designs):
+    from repro.design.evaluate import evaluate_operands
+    return evaluate_operands(A, W, designs)
 
 
 @dataclasses.dataclass(frozen=True)
 class MonitorConfig:
+    """What to stream, at which sampling caps, priced for which designs.
+
+    ``designs`` is the explicit design list; when empty (the default) it
+    derives the paper pair from the legacy knobs ``geometry`` /
+    ``bic_segments`` / ``zvg`` and the ``energy`` model -- so existing
+    configs keep meaning exactly what they meant, and ``energy`` is now
+    honoured everywhere (it used to be silently dropped by monitoring
+    paths that called ``sa_power`` with the default model).
+    """
     geometry: systolic.SAGeometry = systolic.PAPER_SA
     bic_segments: tuple[int, ...] = bic.MANTISSA_ONLY
     zvg: bool = True
+    energy: power.EnergyModel = power.DEFAULT_ENERGY
+    designs: tuple["DesignPoint", ...] = ()
     max_rows: int = 256     # sample cap along M (input streams)
     max_cols: int = 256     # sample cap along N (weight streams)
     max_depth: int = 1024   # sample cap along K (stream length)
+
+    @property
+    def design_list(self) -> tuple["DesignPoint", ...]:
+        """The designs this monitor prices (paper pair when unset)."""
+        if self.designs:
+            return self.designs
+        from repro.design.point import paper_pair
+        return paper_pair(self.geometry, self.bic_segments,
+                          self.zvg, self.energy)
+
+    @property
+    def design_names(self) -> tuple[str, ...]:
+        return tuple(d.name for d in self.design_list)
+
+    @property
+    def reference_design(self) -> str:
+        """Savings denominator: the first design in the list."""
+        return self.design_list[0].name
+
+    @property
+    def primary_design(self) -> str:
+        """Headline design for twin-style ratios: the second design (or
+        the only one)."""
+        names = self.design_names
+        return names[1] if len(names) > 1 else names[0]
 
 
 DEFAULT_MONITOR = MonitorConfig()
@@ -102,25 +154,33 @@ def sample_sizes(acts_shape, weights_shape,
 @partial(jax.jit, static_argnames=("cfg",))
 def monitor_streams(A: jax.Array, W: jax.Array,
                     cfg: MonitorConfig = DEFAULT_MONITOR) -> dict:
-    """Raw counters + power breakdown for pre-shaped ``[M,K] x [K,N]``.
+    """Legacy twin-design view for pre-shaped ``[M,K] x [K,N]`` operands.
 
     No reshaping or sub-sampling happens here: the caller controls exactly
-    which streams are modelled (the tracer samples per-site; callers with
-    small operands pass them whole).
+    which streams are modelled. Prices the paper pair implied by the
+    config's legacy knobs with the config's ``energy`` model.
 
     Returns:
       ``{"report": <sa_stream_report counters>, "power": <sa_power dict>}``
       -- raw counters, not just ratios, so callers can aggregate energies
       across sites with :func:`repro.core.power.aggregate_savings`.
     """
+    if cfg.designs:
+        raise ValueError(
+            "monitor_streams is the legacy twin-design wrapper and cannot "
+            "price an explicit MonitorConfig.designs list; use "
+            "stream_counters (flat per-design counters) or "
+            "repro.design.evaluate_operands")
     rep = systolic.sa_stream_report(
         A, W, cfg.geometry, tuple(cfg.bic_segments), cfg.zvg)
-    pw = power.sa_power(rep)
+    pw = power.sa_power(rep, cfg.energy)
     return {"report": rep, "power": pw}
 
 
-#: per-design energy components tracked by :func:`stream_counters`
-#: (matches :func:`repro.core.power.sa_power` output keys)
+#: canonical per-design energy components in ``stream_counters`` keys
+#: (``repro.core.power.COMPONENTS`` + the total)
+COMPONENTS = power.COMPONENTS + ("total",)
+#: legacy twin-design component sets (pre-design-API flat keys)
 BASE_COMPONENTS = ("streaming", "clock", "control", "mult", "add", "acc",
                    "unload", "total")
 PROP_COMPONENTS = BASE_COMPONENTS + ("overhead",)
@@ -131,27 +191,25 @@ def stream_counters(A: jax.Array, W: jax.Array,
                     cfg: MonitorConfig = DEFAULT_MONITOR) -> dict:
     """Flat scalar counters for one pre-shaped ``[M,K] x [K,N]`` stream.
 
-    The additive form of :func:`monitor_streams`: ``eb_<c>``/``ep_<c>`` are
-    baseline/proposed energies per component (fJ), ``h_*``/``v_*`` the
-    horizontal/vertical pipeline toggle counts, plus ``cycles`` and the
+    The additive form of the design evaluation: per design ``d`` in
+    ``cfg.design_list``, ``e/<d>/<component>`` energies (fJ) and
+    ``h/<d>`` / ``v/<d>`` pipeline toggle counts, plus ``cycles`` and the
     (non-additive) ``zero_fraction``. Summing these dicts over calls --
-    optionally scaled back up by a sampled-fraction -- and only THEN taking
-    ratios implements the paper's energy-before-ratios aggregation rule
-    incrementally, which is how per-step accumulation (serving) stays
-    consistent with whole-call tracing.
+    optionally scaled back up by a sampled-fraction -- and only THEN
+    taking ratios implements the paper's energy-before-ratios aggregation
+    rule incrementally, which is how per-step accumulation (serving)
+    stays consistent with whole-call tracing.
     """
-    out = monitor_streams(A, W, cfg)
-    rep, pw = out["report"], out["power"]
-    flat = {f"eb_{k}": pw["baseline"][k] for k in BASE_COMPONENTS}
-    flat.update({f"ep_{k}": pw["proposed"][k] for k in PROP_COMPONENTS})
-    flat.update({
-        "h_base": rep["h_reg_toggles_base"],
-        "h_prop": rep["h_reg_toggles_prop"],
-        "v_base": rep["v_reg_toggles_base"],
-        "v_prop": rep["v_reg_toggles_prop"],
-        "cycles": rep["cycles"],
-        "zero_fraction": rep["zero_fraction"],
-    })
+    ev = _evaluate_operands(A, W, cfg.design_list)
+    flat = {}
+    for name, r in ev.items():
+        for comp, v in r["energy"].items():
+            flat[f"e/{name}/{comp}"] = v
+        flat[f"h/{name}"] = r["h"]
+        flat[f"v/{name}"] = r["v"]
+    first = ev[cfg.design_names[0]]
+    flat["cycles"] = first["cycles"]
+    flat["zero_fraction"] = first["zero_fraction"]
     return flat
 
 
@@ -175,14 +233,39 @@ def sampled_fraction_scale(m: int, k: int, n: int,
 
 
 def counters_to_energy(counters: dict, scale: float = 1.0) -> dict:
-    """Shape accumulated flat counters like ``power.sa_power`` output
-    (``{"baseline": {...}, "proposed": {...}}``) so they aggregate with
-    :func:`repro.core.power.aggregate_savings`."""
-    base = {k: float(counters.get(f"eb_{k}", 0.0)) * scale
-            for k in BASE_COMPONENTS}
-    prop = {k: float(counters.get(f"ep_{k}", 0.0)) * scale
-            for k in PROP_COMPONENTS}
-    return {"baseline": base, "proposed": prop}
+    """Shape accumulated flat counters as ``{design: {component: fJ}}``
+    so they aggregate with :func:`repro.core.power.aggregate_savings`
+    (the default design names ARE ``"baseline"``/``"proposed"``, which is
+    what keeps the old twin-dict call sites working unchanged).
+
+    Accepts both the design-namespaced keys of :func:`stream_counters`
+    and the pre-design-API ``eb_*``/``ep_*`` flat keys.
+    """
+    out: dict[str, dict[str, float]] = {}
+    for key, v in counters.items():
+        if key.startswith("e/"):
+            _, name, comp = key.split("/", 2)
+            out.setdefault(name, {})[comp] = float(v) * scale
+        elif key.startswith("eb_"):
+            out.setdefault("baseline", {})[key[3:]] = float(v) * scale
+        elif key.startswith("ep_"):
+            out.setdefault("proposed", {})[key[3:]] = float(v) * scale
+    return out
+
+
+def counters_toggles(counters: dict, scale: float = 1.0) -> dict:
+    """Per-design ``{"h": ..., "v": ...}`` pipeline toggles from
+    accumulated flat counters (legacy ``h_base``-style keys included)."""
+    out: dict[str, dict[str, float]] = {}
+    for key, v in counters.items():
+        if key.startswith(("h/", "v/")):
+            axis, name = key.split("/", 1)
+            out.setdefault(name, {})[axis] = float(v) * scale
+        elif key in ("h_base", "v_base"):
+            out.setdefault("baseline", {})[key[0]] = float(v) * scale
+        elif key in ("h_prop", "v_prop"):
+            out.setdefault("proposed", {})[key[0]] = float(v) * scale
+    return out
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -195,19 +278,26 @@ def monitor_matmul(acts: jax.Array, weights: jax.Array,
       weights: ``[K, N]``.
     Returns:
       dict of scalar metrics: zero fraction, streaming activity reduction,
-      modelled total/streaming power savings, streaming share, and the
+      modelled total/streaming power savings and streaming share (primary
+      design vs the reference design of ``cfg.design_list``), and the
       sample sizes actually streamed through the model.
     """
     A, W = subsample_operands(acts, weights, cfg)
-    out = monitor_streams(A, W, cfg)
-    rep, pw = out["report"], out["power"]
+    ev = _evaluate_operands(A, W, cfg.design_list)
+    ref = ev[cfg.reference_design]
+    pri = ev[cfg.primary_design]
     sizes = sample_sizes(acts.shape, weights.shape, cfg)
+    one = jnp.float32(1.0)
     metrics = {
-        "zero_fraction": rep["zero_fraction"],
-        "activity_reduction": systolic.streaming_activity_reduction(rep),
-        "saving_total": pw["saving_total"],
-        "saving_streaming": pw["saving_streaming"],
-        "streaming_share": pw["streaming_share_base"],
+        "zero_fraction": ref["zero_fraction"],
+        "activity_reduction": 1.0 - (pri["h"] + pri["v"])
+        / jnp.maximum(ref["h"] + ref["v"], one),
+        "saving_total": 1.0 - pri["energy"]["total"]
+        / jnp.maximum(ref["energy"]["total"], one),
+        "saving_streaming": 1.0 - pri["energy"]["streaming"]
+        / jnp.maximum(ref["energy"]["streaming"], one),
+        "streaming_share": ref["energy"]["streaming"]
+        / ref["energy"]["total"],
     }
     metrics.update({k: jnp.float32(v) for k, v in sizes.items()})
     return metrics

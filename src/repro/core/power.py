@@ -92,8 +92,50 @@ def _mult_energy(em: EnergyModel, slots, tog_a, tog_b, mtog_a, mtog_b):
     return static + pp + exp
 
 
+#: canonical per-design energy components, in total-summation order
+#: (``overhead`` is 0 for uncoded designs)
+COMPONENTS = ("streaming", "clock", "control", "mult", "add", "acc",
+              "unload", "overhead")
+
+
+def price_components(em: EnergyModel, *, cyc, n_pe, pe_slots, gated,
+                     nonzero, h_toggles, v_toggles, a_toggles, b_toggles,
+                     a_mant, b_mant, unload_trav, overhead) -> dict:
+    """Energy components (fJ) of ONE design from its toggle/slot counts.
+
+    The single pricing authority: both the legacy :func:`sa_power` pair
+    and the N-design :func:`repro.design.evaluate.design_energy` call
+    this, so any design expressed either way prices identically (the
+    golden-equivalence guarantee of the design API). ``gated`` and
+    ``overhead`` are 0 for uncoded designs, which degenerates every
+    formula to the conventional-SA charge exactly (``x - 0.0 == x``).
+    """
+    comps = {}
+    comps["streaming"] = em.E_STREAM_BIT * (h_toggles + v_toggles)
+    # gated slots drop the LEAF share of the gateable flops' clock load
+    # (the clock distribution tree itself keeps toggling)
+    clk_full = em.E_CLK_BIT * em.REG_BITS_PER_PE * n_pe * cyc
+    clk_saved = (em.E_CLK_BIT * em.GATEABLE_BITS_PER_PE
+                 * em.CLK_LEAF_FRAC * gated)
+    comps["clock"] = clk_full - clk_saved
+    comps["control"] = em.E_CTRL_CYCLE * n_pe * cyc
+    comps["mult"] = _mult_energy(em, pe_slots - gated,
+                                 a_toggles, b_toggles, a_mant, b_mant)
+    comps["add"] = em.E_ADD * (
+        em.ADD_STATIC_FRAC * (pe_slots - gated)
+        + (1 - em.ADD_STATIC_FRAC) * nonzero)
+    comps["acc"] = em.E_REG_BIT * em.ACC_TOGGLE_BITS * nonzero
+    comps["unload"] = (em.E_STREAM_BIT * em.UNLOAD_TOGGLE_BITS
+                       * unload_trav)
+    comps["overhead"] = overhead
+    comps["total"] = sum(comps[k] for k in COMPONENTS)
+    return comps
+
+
 def sa_power(report: dict, em: EnergyModel = DEFAULT_ENERGY) -> dict:
-    """Dynamic energy (fJ) breakdown for baseline and proposed designs.
+    """Dynamic energy (fJ) breakdown for the paper's baseline/proposed
+    pair (compat shim; the N-design path is
+    :func:`repro.design.evaluate.evaluate`).
 
     Args:
       report: output of :func:`repro.core.systolic.sa_stream_report`.
@@ -108,47 +150,32 @@ def sa_power(report: dict, em: EnergyModel = DEFAULT_ENERGY) -> dict:
     nonzero = report["nonzero_slots"]
 
     # ---------------- baseline (no power-saving features) ----------------
-    base = {}
-    base["streaming"] = em.E_STREAM_BIT * (
-        report["h_reg_toggles_base"] + report["v_reg_toggles_base"])
-    base["clock"] = em.E_CLK_BIT * em.REG_BITS_PER_PE * n_pe * cyc
-    base["control"] = em.E_CTRL_CYCLE * n_pe * cyc
-    base["mult"] = _mult_energy(
-        em, pe_slots,
-        report["mult_a_toggles_base"], report["mult_b_toggles_base"],
-        report["mult_a_mant_toggles_base"], report["mult_b_mant_toggles"])
-    base["add"] = em.E_ADD * (
-        em.ADD_STATIC_FRAC * pe_slots + (1 - em.ADD_STATIC_FRAC) * nonzero)
-    base["acc"] = em.E_REG_BIT * em.ACC_TOGGLE_BITS * nonzero
-    base["unload"] = (em.E_STREAM_BIT * em.UNLOAD_TOGGLE_BITS
-                      * report["unload_reg_traversals"])
-    base["total"] = sum(base.values())
+    base = price_components(
+        em, cyc=cyc, n_pe=n_pe, pe_slots=pe_slots, gated=0.0,
+        nonzero=nonzero,
+        h_toggles=report["h_reg_toggles_base"],
+        v_toggles=report["v_reg_toggles_base"],
+        a_toggles=report["mult_a_toggles_base"],
+        b_toggles=report["mult_b_toggles_base"],
+        a_mant=report["mult_a_mant_toggles_base"],
+        b_mant=report["mult_b_mant_toggles"],
+        unload_trav=report["unload_reg_traversals"], overhead=0.0)
 
     # ---------------- proposed (BIC on weights + ZVG on inputs) ----------
-    prop = {}
-    prop["streaming"] = em.E_STREAM_BIT * (
-        report["h_reg_toggles_prop"] + report["v_reg_toggles_prop"])
-    # gated slots drop the LEAF share of the gateable flops' clock load
-    # (the clock distribution tree itself keeps toggling)
-    clk_full = em.E_CLK_BIT * em.REG_BITS_PER_PE * n_pe * cyc
-    clk_saved = (em.E_CLK_BIT * em.GATEABLE_BITS_PER_PE
-                 * em.CLK_LEAF_FRAC * gated)
-    prop["clock"] = clk_full - clk_saved
-    prop["control"] = base["control"]  # sequencing logic is not gated
-    prop["mult"] = _mult_energy(
-        em, pe_slots - gated,
-        report["mult_a_toggles_prop"], report["mult_b_toggles_prop"],
-        report["mult_a_mant_toggles_prop"], report["mult_b_mant_toggles"])
-    prop["add"] = em.E_ADD * (
-        em.ADD_STATIC_FRAC * (pe_slots - gated)
-        + (1 - em.ADD_STATIC_FRAC) * nonzero)
-    prop["acc"] = base["acc"]          # same non-zero updates
-    prop["unload"] = base["unload"]    # same dense results
-    prop["overhead"] = (
+    overhead = (
         em.E_ZDET * report["zdet_words"]
         + em.E_ENC * report["enc_words"]
         + em.E_DEC_XOR_BIT * em.MANT_FRAC * report["mult_b_toggles_prop"])
-    prop["total"] = sum(prop.values())
+    prop = price_components(
+        em, cyc=cyc, n_pe=n_pe, pe_slots=pe_slots, gated=gated,
+        nonzero=nonzero,
+        h_toggles=report["h_reg_toggles_prop"],
+        v_toggles=report["v_reg_toggles_prop"],
+        a_toggles=report["mult_a_toggles_prop"],
+        b_toggles=report["mult_b_toggles_prop"],
+        a_mant=report["mult_a_mant_toggles_prop"],
+        b_mant=report["mult_b_mant_toggles"],
+        unload_trav=report["unload_reg_traversals"], overhead=overhead)
 
     saving = 1.0 - prop["total"] / jnp.maximum(base["total"], 1.0)
     stream_saving = 1.0 - prop["streaming"] / jnp.maximum(base["streaming"], 1.0)

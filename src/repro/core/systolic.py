@@ -53,23 +53,82 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("geom", "bic_segments", "zvg_enabled"))
-def sa_stream_report(A: jax.Array, Bm: jax.Array,
+def seg_key(segments: Sequence[int]) -> str:
+    """Canonical menu-key suffix for a BIC segment tuple."""
+    return "+".join(f"{int(s) & 0xFFFF:04x}" for s in segments)
+
+
+def _edge_menu(bits: jax.Array, prefix: str,
+               bic_variants: tuple[tuple[int, ...], ...],
+               with_zvg: bool) -> dict:
+    """Coding menu for one edge's ``uint16[T, lanes]`` stream.
+
+    Emits, per lane set summed to f32 scalars: the raw and mantissa-field
+    transition counts, one BIC transition count per requested segment
+    variant, and -- when ``with_zvg`` -- the zero-held (gated) variants of
+    all of the above plus the is-zero-line toggles. These are the
+    coding-agnostic primitives :func:`repro.design.evaluate.design_energy`
+    prices any :class:`~repro.design.DesignPoint` from.
+    """
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+    out = {}
+    out[f"{prefix}_raw"] = f32(activity.stream_transitions(bits)).sum()
+    out[f"{prefix}_mant_raw"] = f32(activity.stream_transitions(
+        bits, int(B.MANT_MASK))).sum()
+    if with_zvg:
+        # ONE scan materializes the held-register sequence; every gated
+        # counter (full/mantissa transitions, is-zero line) and any
+        # bic+zvg variant derives from it vectorized, with integer
+        # results identical to zvg.zvg_stream_report's
+        held = zvg.zero_held_stream(bits)
+        prev = jnp.concatenate(
+            [jnp.zeros_like(held[:1]), held[:-1]], axis=0)
+        out[f"{prefix}_zvg"] = f32(B.hamming(held, prev).sum(axis=0)).sum()
+        out[f"{prefix}_mant_zvg"] = f32(
+            B.hamming(held, prev, B.MANT_MASK).sum(axis=0)).sum()
+        z = zvg.is_zero(bits)
+        prev_z = jnp.concatenate(
+            [jnp.zeros_like(z[:1]), z[:-1]], axis=0)
+        out[f"{prefix}_iszero"] = f32(
+            (z ^ prev_z).astype(jnp.int32).sum(axis=0)).sum()
+    for segs in bic_variants:
+        out[f"{prefix}_bic/{seg_key(segs)}"] = f32(
+            bic.bic_transitions(bits, segs)).sum()
+        if with_zvg:
+            out[f"{prefix}_bic_zvg/{seg_key(segs)}"] = f32(
+                bic.bic_transitions(held, segs)).sum()
+    return out
+
+
+@partial(jax.jit, static_argnames=("geom", "west_bic", "north_bic",
+                                   "west_zvg", "north_zvg"))
+def sa_design_report(A: jax.Array, Bm: jax.Array,
                      geom: SAGeometry = PAPER_SA,
-                     bic_segments: Sequence[int] = bic.MANTISSA_ONLY,
-                     zvg_enabled: bool = True) -> dict:
-    """Stream/compute activity counters for one tiled matmul on the SA.
+                     west_bic: tuple[tuple[int, ...], ...] = (),
+                     north_bic: tuple[tuple[int, ...], ...] = (
+                         bic.MANTISSA_ONLY,),
+                     west_zvg: bool = True,
+                     north_zvg: bool = False) -> dict:
+    """Coding-agnostic stream counters for one tiled matmul on the SA.
+
+    One pass over the operands computes a *menu* of per-edge counters --
+    raw / BIC(segment-variant) / zero-gated / BIC-over-gated transition
+    counts for the West (input) and North (weight) streams -- plus the
+    coding-independent facts (tile counts, MAC slots, zero statistics).
+    Any number of :class:`repro.design.DesignPoint`\\ s sharing ``geom``
+    are then priced from this single report by
+    :func:`repro.design.evaluate.evaluate`; the static menu arguments
+    should be the union of what those designs need.
 
     Args:
-      A:  bf16 ``[M, K]`` inputs (West edge; ZVG applies here).
-      Bm: bf16 ``[K, N]`` weights (North edge; BIC applies here).
-      geom: array geometry.
-      bic_segments: segment masks for the weight-bus BIC encoder.
-      zvg_enabled: model the proposed design's input zero gating.
+      A:  bf16 ``[M, K]`` inputs (West edge).
+      Bm: bf16 ``[K, N]`` weights (North edge).
+      geom: array geometry (determines padding, so also the stream lanes).
+      west_bic / north_bic: BIC segment variants to tabulate per edge.
+      west_zvg / north_zvg: tabulate the zero-gated menu for the edge.
 
-    Returns a dict of scalar counters (float32 to avoid int32 overflow on
-    large layers; relative error < 1e-6 at these magnitudes). Suffix
-    ``_base`` = conventional SA, ``_prop`` = proposed SA.
+    Returns a flat dict of f32 scalars (f32 to avoid int32 overflow on
+    large layers; relative error < 1e-6 at these magnitudes).
     """
     R, C = geom.rows, geom.cols
     A = A.astype(jnp.bfloat16)
@@ -84,37 +143,97 @@ def sa_stream_report(A: jax.Array, Bm: jax.Array,
     Tm, Tn = Mp // R, Np // C
     f32 = lambda v: jnp.asarray(v, jnp.float32)
 
-    # --- West (input) streams: lanes = rows of A, time = K ---------------
     a_bits = activity.matrix_stream_bits(Ap, axis=1)       # [K, M']
-    a_rep = zvg.zvg_stream_report(a_bits)
-    tran_a_raw = f32(a_rep["transitions_raw"]).sum()
-    tran_a_zvg = f32(a_rep["transitions"]).sum()
-    tran_a_mant_raw = f32(a_rep["transitions_mant_raw"]).sum()
-    tran_a_mant_zvg = f32(a_rep["transitions_mant"]).sum()
-    iszero_tog = f32(a_rep["iszero_toggles"]).sum()
-    zeros = f32(a_rep["zeros"]).sum()                      # gated lane-cycles
-
-    # --- North (weight) streams: lanes = cols of B, time = K -------------
     b_bits = activity.matrix_stream_bits(Bp, axis=0)       # [K, N']
-    tran_b_raw = f32(activity.stream_transitions(b_bits)).sum()
-    tran_b_mant = f32(activity.stream_transitions(
-        b_bits, int(B.MANT_MASK))).sum()
-    tran_b_bic = f32(bic.bic_transitions(b_bits, tuple(bic_segments))).sum()
+    out = _edge_menu(a_bits, "w", tuple(west_bic), west_zvg)
+    out.update(_edge_menu(b_bits, "n", tuple(north_bic), north_zvg))
+
+    # --- coding-independent facts ----------------------------------------
+    az = zvg.is_zero(a_bits)
+    zeros = f32(az.astype(jnp.int32).sum())    # zero input lane-cycles
+    nz = zvg.is_zero(b_bits)
+    zeros_n = f32(nz.astype(jnp.int32).sum())  # zero weight lane-cycles
+    # exact count of MAC slots where BOTH operands are zero (needed when a
+    # design gates both edges; inclusion-exclusion on the gated slots)
+    overlap = (f32(az.astype(jnp.int32).sum(axis=1))
+               * f32(nz.astype(jnp.int32).sum(axis=1))).sum()
 
     pe_slots = f32(Mp) * Np * K                  # total MAC slots
-    gated_slots = jnp.where(zvg_enabled, f32(Np) * zeros, 0.0)
     active_frac = 1.0 - zeros / (f32(Mp) * K)    # mean input-active fraction
     # acc register only toggles when the product is non-zero (true for the
     # baseline too: acc + 0 leaves the register unchanged)
     nonzero_slots = pe_slots - f32(Np) * zeros
 
+    fill = R + C - 2
+    cycles = f32(Tm) * Tn * (K + fill)
+    unload_trav = f32(Tm) * Tn * C * R * (R + 1) / 2.0     # 32b result shifts
+
+    out.update({
+        "M": f32(M), "K": f32(K), "N": f32(N),
+        "Mp": f32(Mp), "Np": f32(Np), "Tm": f32(Tm), "Tn": f32(Tn),
+        "rows": f32(R), "cols": f32(C),
+        "cycles": cycles,
+        "pe_slots": pe_slots,
+        "nonzero_slots": nonzero_slots,
+        "active_frac": active_frac,
+        "w_zeros": zeros,
+        "n_zeros": zeros_n,
+        "gated_overlap": overlap,
+        "zero_fraction": zeros / (f32(Mp) * K),
+        "unload_reg_traversals": unload_trav,
+        "west_words": f32(Tn) * Mp * K,    # West-edge words (zdet checks)
+        "north_words": f32(Tm) * Np * K,   # North-edge words (BIC encodes)
+    })
+    return out
+
+
+@partial(jax.jit, static_argnames=("geom", "bic_segments", "zvg_enabled"))
+def sa_stream_report(A: jax.Array, Bm: jax.Array,
+                     geom: SAGeometry = PAPER_SA,
+                     bic_segments: Sequence[int] = bic.MANTISSA_ONLY,
+                     zvg_enabled: bool = True) -> dict:
+    """Legacy twin-design counters (compat shim over the design menu).
+
+    Args:
+      A:  bf16 ``[M, K]`` inputs (West edge; ZVG applies here).
+      Bm: bf16 ``[K, N]`` weights (North edge; BIC applies here).
+      geom: array geometry.
+      bic_segments: segment masks for the weight-bus BIC encoder.
+      zvg_enabled: model the proposed design's input zero gating.
+
+    Returns the historical dict of scalar counters with ``_base``
+    (conventional SA) / ``_prop`` (paper-proposed SA) suffixes, assembled
+    from :func:`sa_design_report` -- so the legacy pair and the N-design
+    path price from the identical stream pass.
+    """
+    R, C = geom.rows, geom.cols
+    segs = tuple(int(s) for s in bic_segments)
+    menu = sa_design_report(A, Bm, geom, west_bic=(), north_bic=(segs,),
+                            west_zvg=True, north_zvg=False)
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+
+    tran_a_raw = menu["w_raw"]
+    tran_a_zvg = menu["w_zvg"]
+    tran_a_mant_raw = menu["w_mant_raw"]
+    tran_a_mant_zvg = menu["w_mant_zvg"]
+    iszero_tog = menu["w_iszero"]
+    zeros = menu["w_zeros"]
+    tran_b_raw = menu["n_raw"]
+    tran_b_mant = menu["n_mant_raw"]
+    tran_b_bic = menu[f"n_bic/{seg_key(segs)}"]
+    Mp, Np = menu["Mp"], menu["Np"]
+    Tm, Tn = menu["Tm"], menu["Tn"]
+    active_frac = menu["active_frac"]
+
+    gated_slots = jnp.where(zvg_enabled, Np * zeros, 0.0)
+
     # --- pipeline register/wire toggles ----------------------------------
-    h_base = f32(Tn) * C * tran_a_raw
+    h_base = Tn * C * tran_a_raw
     h_prop = jnp.where(zvg_enabled,
-                       f32(Tn) * C * (tran_a_zvg + iszero_tog),
+                       Tn * C * (tran_a_zvg + iszero_tog),
                        h_base)
-    v_base = f32(Tm) * R * tran_b_raw
-    v_prop = f32(Tm) * R * tran_b_bic
+    v_base = Tm * R * tran_b_raw
+    v_prop = Tm * R * tran_b_bic
 
     # --- multiplier input toggles (datapath switching proxy) -------------
     # Weight-side toggles only cause internal switching while the input
@@ -122,31 +241,24 @@ def sa_stream_report(A: jax.Array, Bm: jax.Array,
     # BOTH designs mask the b-side by the input-active fraction
     # (independence approximation, see module docstring). The proposed
     # design additionally compresses the a-side toggles via gating.
-    mult_a_base = f32(Np) * tran_a_raw
-    mult_a_prop = jnp.where(zvg_enabled, f32(Np) * tran_a_zvg, mult_a_base)
-    mult_a_mant_base = f32(Np) * tran_a_mant_raw
+    mult_a_base = Np * tran_a_raw
+    mult_a_prop = jnp.where(zvg_enabled, Np * tran_a_zvg, mult_a_base)
+    mult_a_mant_base = Np * tran_a_mant_raw
     mult_a_mant_prop = jnp.where(
-        zvg_enabled, f32(Np) * tran_a_mant_zvg, mult_a_mant_base)
-    mult_b_base = active_frac * f32(Mp) * tran_b_raw
+        zvg_enabled, Np * tran_a_mant_zvg, mult_a_mant_base)
+    mult_b_base = active_frac * Mp * tran_b_raw
     mult_b_prop = mult_b_base
-    mult_b_mant = active_frac * f32(Mp) * tran_b_mant
-
-    # --- bookkeeping ------------------------------------------------------
-    fill = R + C - 2
-    cycles = f32(Tm) * Tn * (K + fill)
-    unload_trav = f32(Tm) * Tn * C * R * (R + 1) / 2.0     # 32b result shifts
-    zdet_words = f32(Tn) * Mp * K                          # West-edge checks
-    enc_words = f32(Tm) * Np * K                           # North-edge encodes
+    mult_b_mant = active_frac * Mp * tran_b_mant
 
     return {
-        "M": f32(M), "K": f32(K), "N": f32(N),
-        "Mp": f32(Mp), "Np": f32(Np), "Tm": f32(Tm), "Tn": f32(Tn),
+        "M": menu["M"], "K": menu["K"], "N": menu["N"],
+        "Mp": Mp, "Np": Np, "Tm": Tm, "Tn": Tn,
         "rows": f32(R), "cols": f32(C),
-        "cycles": cycles,
-        "pe_slots": pe_slots,
+        "cycles": menu["cycles"],
+        "pe_slots": menu["pe_slots"],
         "gated_slots": gated_slots,
-        "nonzero_slots": nonzero_slots,
-        "zero_fraction": zeros / (f32(Mp) * K),
+        "nonzero_slots": menu["nonzero_slots"],
+        "zero_fraction": menu["zero_fraction"],
         "h_reg_toggles_base": h_base, "h_reg_toggles_prop": h_prop,
         "v_reg_toggles_base": v_base, "v_reg_toggles_prop": v_prop,
         "mult_a_toggles_base": mult_a_base, "mult_a_toggles_prop": mult_a_prop,
@@ -154,9 +266,9 @@ def sa_stream_report(A: jax.Array, Bm: jax.Array,
         "mult_a_mant_toggles_base": mult_a_mant_base,
         "mult_a_mant_toggles_prop": mult_a_mant_prop,
         "mult_b_mant_toggles": mult_b_mant,
-        "unload_reg_traversals": unload_trav,
-        "zdet_words": zdet_words,
-        "enc_words": enc_words,
+        "unload_reg_traversals": menu["unload_reg_traversals"],
+        "zdet_words": menu["west_words"],
+        "enc_words": menu["north_words"],
     }
 
 

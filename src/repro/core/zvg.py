@@ -78,6 +78,29 @@ def zvg_stream_report(stream: jax.Array, init: jax.Array | None = None):
     }
 
 
+@jax.jit
+def zero_held_stream(stream: jax.Array,
+                     init: jax.Array | None = None) -> jax.Array:
+    """The effective register sequence under ZVG: each zero word is
+    replaced by the last transmitted non-zero value (``init`` before the
+    first one). Feeding this stream to any downstream encoder models that
+    encoder stacked ON TOP of zero gating -- e.g. BIC over the held
+    stream is the ``bic+zvg`` edge coding of :mod:`repro.design`.
+    """
+    stream = stream.astype(jnp.uint16)
+    if init is None:
+        init = jnp.zeros(stream.shape[1:], jnp.uint16)
+    z = is_zero(stream)
+
+    def step(held, xz):
+        x, zt = xz
+        nxt = jnp.where(zt, held, x)
+        return nxt, nxt
+
+    _, held = jax.lax.scan(step, init, (stream, z))
+    return held
+
+
 def zero_fraction(x: jax.Array) -> jax.Array:
     """Fraction of exactly-zero elements of a (bf16-castable) tensor."""
     return jnp.mean(is_zero(B.to_bits(x)).astype(jnp.float32))

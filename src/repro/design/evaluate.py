@@ -1,0 +1,228 @@
+"""N-design evaluation: price any set of DesignPoints from one stream pass.
+
+The pipeline is split exactly where the physics splits:
+
+1. :func:`repro.core.systolic.sa_design_report` walks the operands ONCE
+   and tabulates a coding menu per edge (raw / BIC-variant / zero-gated /
+   BIC-over-gated transition counts) plus the coding-independent facts.
+2. :func:`design_energy` / :func:`evaluate` pick each design's entries off
+   that menu and price them with
+   :func:`repro.core.power.price_components` -- the same pricing authority
+   the legacy ``sa_power`` pair uses, so ``evaluate(report,
+   [PAPER_BASELINE, PAPER_PROPOSED])`` reproduces the calibrated
+   baseline/proposed energies bit-for-bit.
+
+Evaluation is per-design independent, which gives the API its two
+structural guarantees (property-tested): the result is invariant under
+reordering of the design list, and a single-design evaluation equals the
+corresponding slice of any multi-design evaluation.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import power, systolic
+from repro.core.systolic import seg_key
+
+from .point import Coding, DesignPoint
+
+
+def _check_names(designs: Sequence[DesignPoint]) -> None:
+    names = [d.name for d in designs]
+    if len(set(names)) != len(names):
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate design names {dupes}")
+
+
+def menu_args(designs: Sequence[DesignPoint]
+              ) -> dict[systolic.SAGeometry, dict]:
+    """Static :func:`sa_design_report` arguments per geometry: the union
+    of menu entries the designs need, grouped by the geometry they share
+    a stream pass with."""
+    groups: dict[systolic.SAGeometry, dict] = {}
+    for d in designs:
+        g = groups.setdefault(d.geometry, {
+            "west_bic": [], "north_bic": [],
+            "west_zvg": False, "north_zvg": False})
+        for edge, c in (("west", d.west), ("north", d.north)):
+            if c.bic is not None and c.bic not in g[f"{edge}_bic"]:
+                g[f"{edge}_bic"].append(c.bic)
+            if c.zvg:
+                g[f"{edge}_zvg"] = True
+    # sorted variant tuples -> design-list order never changes the static
+    # jit cache key of the underlying sa_design_report
+    return {geom: {"west_bic": tuple(sorted(g["west_bic"])),
+                   "north_bic": tuple(sorted(g["north_bic"])),
+                   "west_zvg": g["west_zvg"],
+                   "north_zvg": g["north_zvg"]}
+            for geom, g in groups.items()}
+
+
+def _edge_toggles(report: dict, prefix: str, c: Coding):
+    """Per-stream transition count of one edge under one coding (before
+    multiplication by the pipeline path length)."""
+    if c.zvg and c.bic is not None:
+        return (report[f"{prefix}_bic_zvg/{seg_key(c.bic)}"]
+                + report[f"{prefix}_iszero"])
+    if c.zvg:
+        return report[f"{prefix}_zvg"] + report[f"{prefix}_iszero"]
+    if c.bic is not None:
+        return report[f"{prefix}_bic/{seg_key(c.bic)}"]
+    return report[f"{prefix}_raw"]
+
+
+def _mult_toggles(report: dict, prefix: str, c: Coding, mant: bool):
+    """Operand toggles as seen by the multipliers: BIC is decoded at the
+    PE (the datapath sees raw values), ZVG holds the operand register
+    (the datapath sees the zero-compressed sequence)."""
+    field = "mant_" if mant else ""
+    if c.zvg:
+        return report[f"{prefix}_{field}zvg"]
+    return report[f"{prefix}_{field}raw"]
+
+
+def design_energy(report: dict, design: DesignPoint) -> dict:
+    """Price ONE design from a :func:`sa_design_report` menu.
+
+    Returns ``{"energy": {component: fJ, ..., "total": fJ},
+    "h": horizontal-pipeline toggles, "v": vertical-pipeline toggles,
+    "cycles": ..., "zero_fraction": ...}``. The menu must have been built
+    for ``design.geometry`` with this design's codings included (see
+    :func:`menu_args`); a missing entry raises ``KeyError``.
+    """
+    em = design.energy
+    cw, cn = design.west, design.north
+    R, C = design.geometry.rows, design.geometry.cols
+    Mp, Np = report["Mp"], report["Np"]
+    Tm, Tn = report["Tm"], report["Tn"]
+    active_frac = report["active_frac"]
+
+    # pipeline register/wire toggles = per-stream transitions x path length
+    h_tog = Tn * C * _edge_toggles(report, "w", cw)
+    v_tog = Tm * R * _edge_toggles(report, "n", cn)
+
+    # multiplier operand toggles (b-side masked by the input-active
+    # fraction in EVERY design: a zero input operand zeroes the partial
+    # products whether or not anything is gated)
+    a_tog = Np * _mult_toggles(report, "w", cw, mant=False)
+    a_mant = Np * _mult_toggles(report, "w", cw, mant=True)
+    b_tog = active_frac * Mp * _mult_toggles(report, "n", cn, mant=False)
+    b_mant = active_frac * Mp * _mult_toggles(report, "n", cn, mant=True)
+
+    # clock/compute gating from zero values, per gated edge;
+    # inclusion-exclusion removes the doubly-counted both-zero slots
+    gated = 0.0
+    if cw.zvg:
+        gated = Np * report["w_zeros"]
+    if cn.zvg:
+        gated = gated + Mp * report["n_zeros"]
+        if cw.zvg:
+            gated = gated - report["gated_overlap"]
+
+    # proposed-logic overheads, per coded edge (canonical order: zero
+    # detectors, BIC encoders, per-PE decode XORs)
+    overhead = 0.0
+    if cw.zvg:
+        overhead = overhead + em.E_ZDET * report["west_words"]
+    if cn.zvg:
+        overhead = overhead + em.E_ZDET * report["north_words"]
+    if cw.bic is not None:
+        overhead = overhead + em.E_ENC * report["west_words"]
+    if cn.bic is not None:
+        overhead = overhead + em.E_ENC * report["north_words"]
+    if cw.bic is not None:
+        overhead = overhead + em.E_DEC_XOR_BIT * em.MANT_FRAC * a_tog
+    if cn.bic is not None:
+        overhead = overhead + em.E_DEC_XOR_BIT * em.MANT_FRAC * b_tog
+
+    comps = power.price_components(
+        em, cyc=jnp.maximum(report["cycles"], 1.0),
+        n_pe=report["rows"] * report["cols"],
+        pe_slots=report["pe_slots"], gated=gated,
+        nonzero=report["nonzero_slots"],
+        h_toggles=h_tog, v_toggles=v_tog,
+        a_toggles=a_tog, b_toggles=b_tog, a_mant=a_mant, b_mant=b_mant,
+        unload_trav=report["unload_reg_traversals"], overhead=overhead)
+    return {"energy": comps, "h": h_tog, "v": v_tog,
+            "cycles": report["cycles"],
+            "zero_fraction": report["zero_fraction"]}
+
+
+def evaluate(report: dict, designs: Sequence[DesignPoint]) -> dict:
+    """Price every design in ``designs`` from one menu ``report``.
+
+    All designs must share the geometry the menu was built for (padding
+    is geometry-dependent, so streams of different geometries are
+    different streams -- use :func:`evaluate_operands` to mix).
+
+    Returns ``{design.name: design_energy(report, design)}``.
+    """
+    _check_names(designs)
+    geoms = {d.geometry for d in designs}
+    if len(geoms) > 1:
+        raise ValueError(
+            f"evaluate() prices one stream pass; designs span geometries "
+            f"{sorted((g.rows, g.cols) for g in geoms)} -- use "
+            f"evaluate_operands()")
+    return {d.name: design_energy(report, d) for d in designs}
+
+
+def evaluate_operands(A: jax.Array, W: jax.Array,
+                      designs: Sequence[DesignPoint]) -> dict:
+    """Stream ``[M,K] x [K,N]`` operands and price every design.
+
+    One :func:`sa_design_report` pass per distinct geometry (with the
+    union of the group's menu needs); every design is then priced from
+    its group's menu. jit-compatible for a static design tuple.
+    """
+    _check_names(designs)
+    out: dict = {}
+    for geom, kw in menu_args(designs).items():
+        menu = systolic.sa_design_report(A, W, geom, **kw)
+        for d in designs:
+            if d.geometry == geom:
+                out[d.name] = design_energy(menu, d)
+    return out
+
+
+def evaluate_batched(A3: jax.Array, W3: jax.Array,
+                     designs: Sequence[DesignPoint]) -> dict:
+    """Batched form: ``[B,M,K] x [B,K,N]`` independent problems (grouped
+    convolutions, batched dot_generals), energies summed over B and the
+    non-additive scalars averaged/kept consistent."""
+    designs = tuple(designs)
+    per = jax.vmap(lambda a, w: evaluate_operands(a, w, designs))(A3, W3)
+    out = {}
+    for name, r in per.items():
+        out[name] = {
+            "energy": {k: v.sum() for k, v in r["energy"].items()},
+            "h": r["h"].sum(), "v": r["v"].sum(),
+            "cycles": r["cycles"].sum(),
+            "zero_fraction": r["zero_fraction"].mean(),
+        }
+    return out
+
+
+def savings(evaluated: dict, reference: str = "baseline") -> dict:
+    """Relative savings of every design vs ``reference`` (host-side).
+
+    Returns ``{name: {"saving_total", "saving_streaming",
+    "streaming_share"}}`` with the reference's streaming share reported
+    under every design (it is a property of the reference).
+    """
+    ref = evaluated[reference]["energy"]
+    rt = max(float(ref["total"]), 1e-30)
+    rs = max(float(ref["streaming"]), 1e-30)
+    share = float(ref["streaming"]) / rt
+    out = {}
+    for name, r in evaluated.items():
+        e = r["energy"]
+        out[name] = {
+            "saving_total": 1.0 - float(e["total"]) / rt,
+            "saving_streaming": 1.0 - float(e["streaming"]) / rs,
+            "streaming_share": share,
+        }
+    return out

@@ -1,0 +1,150 @@
+"""DesignPoint: a composable spec of one systolic-array design.
+
+The paper's contribution is *selectively targeted* encoding -- BIC on the
+weight (North) bus, ZVG on the input (West) bus -- chosen from the
+switching statistics of each stream. This module makes that choice a
+first-class, composable value instead of a hardwired base/prop dichotomy:
+
+* :class:`Coding` -- what one edge does: nothing, (segmented) bus-invert
+  coding, zero-value clock gating, or both stacked (BIC over the
+  zero-held stream).
+* :class:`DesignPoint` -- per-edge codings + :class:`SAGeometry` +
+  :class:`EnergyModel`, frozen and hashable so it can ride through jit
+  static arguments and config dataclasses.
+
+``PAPER_BASELINE`` / ``PAPER_PROPOSED`` are the two fixed designs the
+whole stack used to hardwire; every compat shim defaults to exactly this
+pair, which is why design-keyed dicts with names ``"baseline"`` /
+``"proposed"`` are drop-in compatible with the old twin-field outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import bic
+from repro.core.power import DEFAULT_ENERGY, EnergyModel
+from repro.core.systolic import PAPER_SA, SAGeometry
+
+
+@dataclasses.dataclass(frozen=True)
+class Coding:
+    """What one bus edge (West inputs / North weights) does.
+
+    ``bic`` is a tuple of disjoint segment masks (``None`` = no BIC);
+    ``zvg`` gates zero values. Both together model BIC over the
+    zero-held stream plus the is-zero line.
+    """
+    bic: tuple[int, ...] | None = None
+    zvg: bool = False
+
+    def __post_init__(self):
+        if self.bic is not None:
+            object.__setattr__(self, "bic",
+                               tuple(int(s) & 0xFFFF for s in self.bic))
+            if not self.bic:
+                raise ValueError("bic segments must be non-empty or None")
+
+    @property
+    def label(self) -> str:
+        parts = []
+        if self.bic is not None:
+            parts.append("bic(" + "+".join(f"{s:#06x}" for s in self.bic)
+                         + ")")
+        if self.zvg:
+            parts.append("zvg")
+        return "+".join(parts) if parts else "none"
+
+
+NONE = Coding()
+ZVG = Coding(zvg=True)
+
+
+def BIC(segments: Sequence[int] = bic.MANTISSA_ONLY, zvg: bool = False
+        ) -> Coding:
+    """BIC with the given segment masks, optionally stacked with ZVG."""
+    return Coding(bic=tuple(int(s) for s in segments), zvg=zvg)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One fully specified SA design: per-edge codings, geometry, energy.
+
+    ``name`` keys every design-keyed dict in the stack (counters,
+    energies, report tables), so it must be unique within an evaluated
+    design list.
+    """
+    name: str
+    west: Coding = NONE       # input edge (activations stream here)
+    north: Coding = NONE      # weight edge
+    geometry: SAGeometry = PAPER_SA
+    energy: EnergyModel = DEFAULT_ENERGY
+
+    def __post_init__(self):
+        if not self.name or "/" in self.name or "," in self.name:
+            raise ValueError(
+                f"design name {self.name!r} must be non-empty and free of "
+                f"'/' and ',' (it namespaces flat counter keys and CLI "
+                f"lists)")
+
+    def with_(self, **kw) -> "DesignPoint":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def label(self) -> str:
+        g = self.geometry
+        return (f"{self.name}[west={self.west.label} "
+                f"north={self.north.label} {g.rows}x{g.cols}]")
+
+
+#: The paper's two fixed designs (16x16, default energy model).
+PAPER_BASELINE = DesignPoint("baseline")
+PAPER_PROPOSED = DesignPoint("proposed", west=ZVG, north=BIC())
+PAPER_PAIR = (PAPER_BASELINE, PAPER_PROPOSED)
+
+
+def paper_pair(geometry: SAGeometry = PAPER_SA,
+               bic_segments: Sequence[int] = bic.MANTISSA_ONLY,
+               zvg: bool = True,
+               energy: EnergyModel = DEFAULT_ENERGY
+               ) -> tuple[DesignPoint, DesignPoint]:
+    """The baseline/proposed pair for arbitrary knobs -- the design-list
+    equivalent of the old ``sa_stream_report(geom, segments, zvg)``
+    argument triple, used by every compat shim."""
+    return (DesignPoint("baseline", geometry=geometry, energy=energy),
+            DesignPoint("proposed",
+                        west=ZVG if zvg else NONE,
+                        north=BIC(bic_segments),
+                        geometry=geometry, energy=energy))
+
+
+def named_designs(geometry: SAGeometry = PAPER_SA,
+                  energy: EnergyModel = DEFAULT_ENERGY
+                  ) -> dict[str, DesignPoint]:
+    """The standard design menu (CLI ``--designs`` names, selection
+    candidates). All entries share ``geometry``/``energy`` so one stream
+    pass prices the whole menu."""
+    mk = lambda name, west, north: DesignPoint(
+        name, west=west, north=north, geometry=geometry, energy=energy)
+    return {
+        "baseline": mk("baseline", NONE, NONE),
+        "proposed": mk("proposed", ZVG, BIC()),
+        "bic-only": mk("bic-only", NONE, BIC()),
+        "zvg-only": mk("zvg-only", ZVG, NONE),
+        "bic-west": mk("bic-west", BIC(zvg=True), BIC()),
+        "mant-exp": mk("mant-exp", ZVG, BIC(bic.MANT_EXP)),
+        "full-bus": mk("full-bus", ZVG, BIC(bic.FULL_BUS)),
+    }
+
+
+def resolve_designs(names: Sequence[str],
+                    geometry: SAGeometry = PAPER_SA,
+                    energy: EnergyModel = DEFAULT_ENERGY
+                    ) -> tuple[DesignPoint, ...]:
+    """Look up a list of design names in :func:`named_designs`."""
+    menu = named_designs(geometry, energy)
+    bad = [n for n in names if n not in menu]
+    if bad:
+        raise ValueError(
+            f"unknown design name(s) {bad}; choose from {sorted(menu)}")
+    return tuple(menu[n] for n in names)

@@ -60,24 +60,28 @@ class RequestPowerReport:
     new_tokens: int
     decode_steps: int          # decode steps this request was live for
     sampled_steps: int         # of which were streamed through the model
-    energy: dict               # {"baseline": {...}, "proposed": {...}}
+    energy: dict               # {design name: {component: fJ}}
     zero_fraction: float       # mean over sampled (site, step) records
     sites: tuple[str, ...]     # monitored site names
+    reference: str = "baseline"   # savings denominator design
+    primary: str = "proposed"     # headline design for the twin ratios
+
+    def saving(self, design: str, component: str = "total") -> float:
+        b = self.energy[self.reference][component]
+        return 1.0 - self.energy[design][component] / max(b, 1e-30)
 
     @property
     def saving_total(self) -> float:
-        b = self.energy["baseline"]["total"]
-        return 1.0 - self.energy["proposed"]["total"] / max(b, 1e-30)
+        return self.saving(self.primary)
 
     @property
     def saving_streaming(self) -> float:
-        b = self.energy["baseline"]["streaming"]
-        return 1.0 - self.energy["proposed"]["streaming"] / max(b, 1e-30)
+        return self.saving(self.primary, "streaming")
 
     @property
     def streaming_share(self) -> float:
-        return (self.energy["baseline"]["streaming"]
-                / max(self.energy["baseline"]["total"], 1e-30))
+        return (self.energy[self.reference]["streaming"]
+                / max(self.energy[self.reference]["total"], 1e-30))
 
     def summary(self) -> dict:
         return {
@@ -88,8 +92,10 @@ class RequestPowerReport:
             "saving_streaming": self.saving_streaming,
             "streaming_share": self.streaming_share,
             "zero_fraction": self.zero_fraction,
-            "energy_base_fj": self.energy["baseline"]["total"],
-            "energy_prop_fj": self.energy["proposed"]["total"],
+            "energy_base_fj": self.energy[self.reference]["total"],
+            "energy_prop_fj": self.energy[self.primary]["total"],
+            "design_savings": {d: self.saving(d) for d in self.energy
+                               if d != self.reference},
         }
 
 
@@ -174,13 +180,22 @@ class PowerAccountant:
             self.capture.record_counters(
                 site, "dot_general", shape,
                 {**scaled, "zero_fraction": rec.zf_mean})
+        energy = monitor.counters_to_energy(total)
+        # zero-fill every configured design so a request that retired with
+        # no sampled records still yields a well-formed (all-zero) report
+        for name in self.mcfg.design_names:
+            comps = energy.setdefault(name, {})
+            for c in monitor.COMPONENTS:
+                comps.setdefault(c, 0.0)
         return RequestPowerReport(
             uid=acc.uid, prompt_tokens=acc.prompt_tokens,
             new_tokens=new_tokens, decode_steps=acc.decode_steps,
             sampled_steps=acc.sampled_steps,
-            energy=monitor.counters_to_energy(total),
+            energy=energy,
             zero_fraction=zf_sum / max(zf_n, 1),
-            sites=tuple(sorted(set(acc.prefill) | set(acc.decode))))
+            sites=tuple(sorted(set(acc.prefill) | set(acc.decode))),
+            reference=self.mcfg.reference_design,
+            primary=self.mcfg.primary_design)
 
     # ----------------------------------------------------------- recording
     def record_prefill(self, slot: int, acts: jax.Array, weight: jax.Array,

@@ -7,11 +7,21 @@ aggregate; ``--json`` exports the per-layer reports.
     PYTHONPATH=src python -m repro.trace
     PYTHONPATH=src python -m repro.trace --archs qwen1.5-0.5b --mode decode
     PYTHONPATH=src python -m repro.trace --sweep --segments mantissa,full
+    PYTHONPATH=src python -m repro.trace --designs baseline,proposed,bic-only
+    PYTHONPATH=src python -m repro.trace --nets resnet50 --archs '' --select
+
+``--designs`` prices an explicit :mod:`repro.design` list (one stream
+pass, N designs) instead of the fixed baseline/proposed pair;
+``--select`` additionally runs per-site greedy selection over those
+designs and reports the ``selected`` pseudo-design -- the paper's
+application-aware encoding choice, automated per matmul site.
 """
 from __future__ import annotations
 
 import argparse
 import os
+
+from repro import design
 
 from . import sweep as sw
 
@@ -33,6 +43,14 @@ def main() -> None:
     ap.add_argument("--segments", default="mantissa",
                     help="BIC segment choice(s), comma-separated "
                          f"(from {sorted(sw.SEGMENTS)})")
+    ap.add_argument("--designs", default="",
+                    help="comma-separated design names to price per site "
+                         f"(from {sorted(design.named_designs())}); "
+                         "overrides --segments")
+    ap.add_argument("--select", action="store_true",
+                    help="per-site greedy design selection over the "
+                         "--designs list (defaults to the full named "
+                         "menu when --designs is not given)")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=16)
     ap.add_argument("--res", type=int, default=112,
@@ -53,6 +71,35 @@ def main() -> None:
     if bad or not segments:
         ap.error(f"unknown --segments {bad or ['(empty)']}; "
                  f"choose from {sorted(sw.SEGMENTS)}")
+    designs = tuple(d for d in args.designs.split(",") if d)
+    if args.select and not designs:
+        designs = tuple(design.named_designs())
+    if designs:
+        menu = design.named_designs()
+        bad = [d for d in designs if d not in menu]
+        if bad:
+            ap.error(f"unknown --designs {bad}; "
+                     f"choose from {sorted(menu)}")
+        if args.select and len(designs) < 2:
+            ap.error("--select needs at least two --designs to choose "
+                     "between")
+    if args.sweep and designs:
+        ap.error("--sweep sweeps geometry x segments; it does not "
+                 "compose with --designs/--select")
+
+    def show(rep):
+        if args.select:
+            sel = design.apply_selection(rep)
+            print(rep.table())
+            s = sel.summary()
+            print(f"selected: {s['saving_selected']*100:.2f}% total "
+                  f"saving vs fixed {sel.primary} "
+                  f"{s['saving_fixed']*100:.2f}% | "
+                  f"{s['n_changed']}/{s['n_sites']} sites prefer a "
+                  f"different design ({', '.join(s['designs_used'])})")
+        else:
+            print(rep.table())
+        print()
 
     if args.sweep:
         cells = sw.run_sweep(archs=archs, nets=nets,
@@ -63,19 +110,21 @@ def main() -> None:
         reports = [(c.model, c.geometry, c.segments, c.report)
                    for c in cells]
     else:
-        ccfg = sw.make_capture_config(args.geometry, segments[0])
+        ccfg = sw.make_capture_config(args.geometry, segments[0],
+                                      designs=designs)
+        # export tag: name what was actually priced (a design list, not
+        # the unused --segments default)
+        seg_tag = f"{len(designs)}designs" if designs else segments[0]
         reports = []
         for arch in archs:
             rep = sw.trace_arch(arch, args.mode, batch=args.batch,
                                 seq=args.seq, cfg=ccfg)
-            print(rep.table())
-            print()
-            reports.append((arch, args.geometry, segments[0], rep))
+            show(rep)
+            reports.append((arch, args.geometry, seg_tag, rep))
         for net in nets:
             rep = sw.trace_cnn(net, res=args.res, cfg=ccfg)
-            print(rep.table())
-            print()
-            reports.append((net, args.geometry, segments[0], rep))
+            show(rep)
+            reports.append((net, args.geometry, seg_tag, rep))
 
     for model, geom, seg, rep in reports:
         tag = f"{model.replace('/', '_')}_{geom}_{seg.replace('+', '')}"

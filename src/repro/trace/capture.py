@@ -30,10 +30,11 @@ from repro.core import monitor
 
 from .interpret import MatmulSite
 
-#: power components tracked per design (re-exported for compatibility;
-#: the canonical definitions live next to ``monitor.stream_counters``)
-_BASE_KEYS = monitor.BASE_COMPONENTS
-_PROP_KEYS = monitor.PROP_COMPONENTS
+# Counters are design-agnostic bookkeeping here: every flat key of
+# ``monitor.stream_counters`` (``e/<design>/<comp>``, ``h/<design>``,
+# ``v/<design>``) is summed/scaled identically, so a capture configured
+# with an N-design MonitorConfig accumulates N designs per site with no
+# code changes in this module.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,8 +151,16 @@ class TraceCapture:
 
     # -------------------------------------------------------------- views
     def site_energy(self, acc: SiteStats) -> dict:
-        """Per-site energy dict shaped like ``power.sa_power`` output so
-        sites aggregate with :func:`repro.core.power.aggregate_savings`;
-        extrapolated over unsampled calls."""
+        """Per-site ``{design: {component: fJ}}`` energies (for the
+        default paper pair that is exactly the old
+        ``{"baseline": ..., "proposed": ...}`` shape, so sites aggregate
+        with :func:`repro.core.power.aggregate_savings`); extrapolated
+        over unsampled calls."""
         scale = acc.calls / max(acc.sampled_calls, 1)
         return monitor.counters_to_energy(acc.counters, scale)
+
+    def site_toggles(self, acc: SiteStats) -> dict:
+        """Per-site ``{design: {"h": ..., "v": ...}}`` pipeline toggles,
+        extrapolated like :meth:`site_energy`."""
+        scale = acc.calls / max(acc.sampled_calls, 1)
+        return monitor.counters_toggles(acc.counters, scale)

@@ -2,10 +2,21 @@
 
 Builds :class:`TraceReport` from a populated
 :class:`repro.trace.capture.TraceCapture`: one :class:`SitePower` row per
-matmul site (the paper's Fig. 4/5 per-layer granularity) and network-level
-aggregates computed the paper's way -- energies summed *before* taking
-ratios (:func:`repro.core.power.aggregate_savings`). Reports serialize to
-JSON (round-trippable), CSV, and a text summary table.
+matmul site (the paper's Fig. 4/5 per-layer granularity), each carrying a
+``{design name: energies}`` dict for every
+:class:`repro.design.DesignPoint` the capture was configured with, and
+network-level aggregates computed the paper's way -- energies summed
+*before* taking ratios (:func:`repro.core.power.aggregate_savings`).
+
+Savings ratios are relative to the report's ``reference`` design (first
+in the monitor's design list) and headline numbers quote its ``primary``
+design (second in the list) -- for the default paper pair these are
+``"baseline"`` and ``"proposed"``, making the legacy twin-field views
+(``energy_base``/``saving_total``/...) exact property shims. Per-site
+greedy selection (:func:`repro.design.select.apply_selection`) injects a
+``"selected"`` pseudo-design that flows through the same machinery.
+
+Reports serialize to JSON (round-trippable), CSV, and a text table.
 """
 from __future__ import annotations
 
@@ -16,10 +27,21 @@ from repro.core import power
 
 from .capture import TraceCapture
 
+#: derived per-site scalars emitted to JSON for human consumption; they
+#: are reconstructed from ``designs`` on load, never parsed back
+_DERIVED = ("activity_reduction", "saving_total", "saving_streaming",
+            "streaming_share", "energy_base", "energy_prop",
+            "energy_base_streaming", "energy_prop_streaming")
+
 
 @dataclasses.dataclass
 class SitePower:
-    """One matmul site's accumulated power outcome (fJ, estimated full)."""
+    """One matmul site's accumulated power outcome (fJ, estimated full).
+
+    ``designs`` maps design name -> ``{"total", "streaming", "h", "v"}``
+    (site energies and pipeline toggle counts). Twin-field accessors are
+    properties over the ``reference``/``primary`` entries.
+    """
     name: str
     kind: str
     shape: tuple[int, int, int, int]   # (B, M, K, N)
@@ -27,21 +49,64 @@ class SitePower:
     sampled_calls: int
     macs: float                        # across all calls
     zero_fraction: float               # mean over sampled calls
-    activity_reduction: float
-    saving_total: float
-    saving_streaming: float
-    streaming_share: float
-    energy_base: float
-    energy_prop: float
-    energy_base_streaming: float
-    energy_prop_streaming: float
+    designs: dict[str, dict]
+    reference: str = "baseline"
+    primary: str = "proposed"
+    selected: str = ""                 # per-site winning design, if chosen
 
-    def power_report(self) -> dict:
+    # ----------------------------------------------------- design views
+    def energy(self, design: str, component: str = "total") -> float:
+        return float(self.designs[design][component])
+
+    def saving(self, design: str, component: str = "total") -> float:
+        ref = max(self.energy(self.reference, component), 1e-30)
+        return 1.0 - self.energy(design, component) / ref
+
+    # ------------------------------------------------ legacy twin views
+    @property
+    def energy_base(self) -> float:
+        return self.energy(self.reference)
+
+    @property
+    def energy_prop(self) -> float:
+        return self.energy(self.primary)
+
+    @property
+    def energy_base_streaming(self) -> float:
+        return self.energy(self.reference, "streaming")
+
+    @property
+    def energy_prop_streaming(self) -> float:
+        return self.energy(self.primary, "streaming")
+
+    @property
+    def saving_total(self) -> float:
+        return self.saving(self.primary)
+
+    @property
+    def saving_streaming(self) -> float:
+        return self.saving(self.primary, "streaming")
+
+    @property
+    def streaming_share(self) -> float:
+        return (self.energy(self.reference, "streaming")
+                / max(self.energy(self.reference), 1e-30))
+
+    @property
+    def activity_reduction(self) -> float:
+        ref = self.designs[self.reference]
+        pri = self.designs[self.primary]
+        denom = max(float(ref["h"]) + float(ref["v"]), 1e-30)
+        return 1.0 - (float(pri["h"]) + float(pri["v"])) / denom
+
+    def power_report(self, primary: str | None = None) -> dict:
         """Shape-compatible with ``power.aggregate_savings`` input."""
-        return {"baseline": {"total": self.energy_base,
-                             "streaming": self.energy_base_streaming},
-                "proposed": {"total": self.energy_prop,
-                             "streaming": self.energy_prop_streaming}}
+        pri = self.designs[primary or self.primary]
+        ref = self.designs[self.reference]
+        return {"baseline": {"total": float(ref["total"]),
+                             "streaming": float(ref["streaming"])},
+                "proposed": {"total": float(pri["total"]),
+                             "streaming": float(pri["streaming"])}}
 
 
 @dataclasses.dataclass
@@ -51,22 +116,32 @@ class TraceReport:
     bic_segments: tuple[int, ...]
     sites: list[SitePower]
     skipped: tuple[str, ...] = ()
+    designs: tuple[str, ...] = ("baseline", "proposed")
+    reference: str = "baseline"
+    primary: str = "proposed"
 
     # ---------------------------------------------------------- aggregates
-    def aggregate(self) -> dict:
-        """Model-level savings, energy-weighted like the paper's overall
-        numbers (sum energies across every traced matmul, then ratio)."""
+    def aggregate_design(self, design: str) -> dict:
+        """Model-level savings of ``design`` vs the reference,
+        energy-weighted like the paper's overall numbers (sum energies
+        across every traced matmul, then ratio)."""
         if not self.sites:
             return {"total_saving": 0.0, "streaming_saving": 0.0,
                     "streaming_share": 0.0}
         return power.aggregate_savings(
-            [s.power_report() for s in self.sites])
+            [s.power_report(design) for s in self.sites])
+
+    def aggregate(self) -> dict:
+        """Primary-design aggregate (the legacy twin-design headline)."""
+        return self.aggregate_design(self.primary)
 
     def summary(self) -> dict:
         agg = self.aggregate()
         macs = sum(s.macs for s in self.sites)
         zf = (sum(s.zero_fraction * s.macs for s in self.sites)
               / max(macs, 1.0))
+        per_design = {d: self.aggregate_design(d)["total_saving"]
+                      for d in self.designs if d != self.reference}
         return {
             "model": self.model,
             "geometry": f"{self.geometry[0]}x{self.geometry[1]}",
@@ -75,18 +150,27 @@ class TraceReport:
             "macs": macs,
             "mean_zero_fraction": zf,
             **agg,
+            "design_savings": per_design,
         }
 
     # ------------------------------------------------------- serialization
     def to_json_dict(self) -> dict:
+        sites = []
+        for s in self.sites:
+            d = dataclasses.asdict(s)
+            d["shape"] = list(s.shape)
+            d.update({k: getattr(s, k) for k in _DERIVED})
+            sites.append(d)
         return {
             "model": self.model,
             "geometry": list(self.geometry),
             "bic_segments": list(self.bic_segments),
+            "designs": list(self.designs),
+            "reference": self.reference,
+            "primary": self.primary,
             "skipped": list(self.skipped),
             "summary": self.summary(),
-            "sites": [{**dataclasses.asdict(s),
-                       "shape": list(s.shape)} for s in self.sites],
+            "sites": sites,
         }
 
     def to_json(self, path: str) -> None:
@@ -99,10 +183,29 @@ class TraceReport:
         for s in d["sites"]:
             s = dict(s)
             s["shape"] = tuple(s["shape"])
+            if "designs" not in s:
+                # pre-design-API export: reconstruct the twin-design dict
+                # from the legacy flat fields (toggles were not stored;
+                # activity_reduction is preserved via the h/v ratio)
+                act = s.get("activity_reduction", 0.0)
+                s["designs"] = {
+                    "baseline": {"total": s["energy_base"],
+                                 "streaming": s["energy_base_streaming"],
+                                 "h": 1.0, "v": 0.0},
+                    "proposed": {"total": s["energy_prop"],
+                                 "streaming": s["energy_prop_streaming"],
+                                 "h": 1.0 - act, "v": 0.0},
+                }
+            for k in _DERIVED:
+                s.pop(k, None)
             sites.append(SitePower(**s))
         return cls(model=d["model"], geometry=tuple(d["geometry"]),
                    bic_segments=tuple(d["bic_segments"]), sites=sites,
-                   skipped=tuple(d.get("skipped", ())))
+                   skipped=tuple(d.get("skipped", ())),
+                   designs=tuple(d.get("designs",
+                                       ("baseline", "proposed"))),
+                   reference=d.get("reference", "baseline"),
+                   primary=d.get("primary", "proposed"))
 
     @classmethod
     def from_json(cls, path: str) -> "TraceReport":
@@ -113,31 +216,43 @@ class TraceReport:
         cols = ("name", "kind", "calls", "B", "M", "K", "N", "macs",
                 "zero_fraction", "activity_reduction", "saving_total",
                 "saving_streaming", "streaming_share", "energy_base",
-                "energy_prop")
+                "energy_prop", "selected")
+        design_cols = [f"energy_{d}" for d in self.designs]
         with open(path, "w") as f:
-            f.write(",".join(cols) + "\n")
+            f.write(",".join(cols + tuple(design_cols)) + "\n")
             for s in self.sites:
                 b, m, k, n = s.shape
-                f.write(",".join(str(v) for v in (
-                    s.name, s.kind, s.calls, b, m, k, n, s.macs,
-                    s.zero_fraction, s.activity_reduction, s.saving_total,
-                    s.saving_streaming, s.streaming_share, s.energy_base,
-                    s.energy_prop)) + "\n")
+                vals = (s.name, s.kind, s.calls, b, m, k, n, s.macs,
+                        s.zero_fraction, s.activity_reduction,
+                        s.saving_total, s.saving_streaming,
+                        s.streaming_share, s.energy_base, s.energy_prop,
+                        s.selected)
+                vals += tuple(s.designs[d]["total"] if d in s.designs
+                              else "" for d in self.designs)
+                f.write(",".join(str(v) for v in vals) + "\n")
 
     # --------------------------------------------------------------- text
     def table(self, max_rows: int = 40) -> str:
+        with_sel = any(s.selected for s in self.sites)
         hdr = (f"{'site':52s} {'kind':8s} {'calls':>5s} "
                f"{'B,M,K,N':>18s} {'zero%':>6s} {'act-red%':>8s} "
                f"{'save%':>6s}")
+        if with_sel:
+            hdr += f" {'best':>9s} {'best%':>6s}"
         lines = [hdr, "-" * len(hdr)]
         shown = sorted(self.sites, key=lambda s: -s.energy_base)
         for s in shown[:max_rows]:
             b, m, k, n = s.shape
             name = s.name if len(s.name) <= 52 else "..." + s.name[-49:]
-            lines.append(
+            line = (
                 f"{name:52s} {s.kind:8s} {s.calls:5d} "
                 f"{f'{b},{m},{k},{n}':>18s} {s.zero_fraction*100:6.1f} "
                 f"{s.activity_reduction*100:8.1f} {s.saving_total*100:6.1f}")
+            if with_sel:
+                line += (f" {s.selected:>9s} "
+                         f"{s.saving(s.selected)*100:6.1f}"
+                         if s.selected else " " * 17)
+            lines.append(line)
         if len(shown) > max_rows:
             lines.append(f"... ({len(shown) - max_rows} more sites)")
         sm = self.summary()
@@ -148,6 +263,11 @@ class TraceReport:
             f"| streaming saving {sm['streaming_saving']*100:.1f}% "
             f"| total saving {sm['total_saving']*100:.1f}% "
             f"(streaming share {sm['streaming_share']*100:.1f}%)")
+        extra = {d: v for d, v in sm["design_savings"].items()
+                 if d != self.primary}
+        if extra:
+            lines.append("designs vs " + self.reference + ": " + "  ".join(
+                f"{d}={v*100:.1f}%" for d, v in extra.items()))
         return "\n".join(lines)
 
 
@@ -155,30 +275,37 @@ def build_report(cap: TraceCapture, model: str,
                  skipped: tuple[str, ...] = ()) -> TraceReport:
     """Freeze a capture registry into a :class:`TraceReport`."""
     mcfg = cap.cfg.monitor
+    names = mcfg.design_names
+    reference = mcfg.reference_design
+    primary = mcfg.primary_design
     sites = []
     for acc in cap.sites.values():
         e = cap.site_energy(acc)
-        eb, ep = e["baseline"], e["proposed"]
-        h_b = acc.counters.get("h_base", 0.0)
-        h_p = acc.counters.get("h_prop", 0.0)
-        v_b = acc.counters.get("v_base", 0.0)
-        v_p = acc.counters.get("v_prop", 0.0)
-        act_red = 1.0 - (h_p + v_p) / max(h_b + v_b, 1e-30)
+        tog = cap.site_toggles(acc)
+        designs = {
+            name: {"total": comps.get("total", 0.0),
+                   "streaming": comps.get("streaming", 0.0),
+                   "h": tog.get(name, {}).get("h", 0.0),
+                   "v": tog.get(name, {}).get("v", 0.0)}
+            for name, comps in e.items()}
         sites.append(SitePower(
             name=acc.name, kind=acc.kind, shape=acc.shape,
             calls=acc.calls, sampled_calls=acc.sampled_calls,
             macs=acc.macs,
             zero_fraction=acc.zf_sum / max(acc.sampled_calls, 1),
-            activity_reduction=act_red,
-            saving_total=1.0 - ep["total"] / max(eb["total"], 1e-30),
-            saving_streaming=(1.0 - ep["streaming"]
-                              / max(eb["streaming"], 1e-30)),
-            streaming_share=eb["streaming"] / max(eb["total"], 1e-30),
-            energy_base=eb["total"], energy_prop=ep["total"],
-            energy_base_streaming=eb["streaming"],
-            energy_prop_streaming=ep["streaming"]))
+            designs=designs, reference=reference, primary=primary))
+    geom = mcfg.design_list[0].geometry
+    if mcfg.designs:
+        # explicit design list: the legacy bic_segments knob is unused;
+        # record the primary design's north-bus segments (if any) so the
+        # JSON metadata describes what was actually priced
+        prim = next(d for d in mcfg.design_list if d.name == primary)
+        segments = prim.north.bic or ()
+    else:
+        segments = mcfg.bic_segments
     return TraceReport(
         model=model,
-        geometry=(mcfg.geometry.rows, mcfg.geometry.cols),
-        bic_segments=tuple(int(s) for s in mcfg.bic_segments),
-        sites=sites, skipped=tuple(skipped))
+        geometry=(geom.rows, geom.cols),
+        bic_segments=tuple(int(s) for s in segments),
+        sites=sites, skipped=tuple(skipped),
+        designs=names, reference=reference, primary=primary)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bic, monitor, systolic
+from repro.design import resolve_designs
 
 from .capture import CaptureConfig, TraceCapture
 from .interpret import trace_fn
@@ -25,21 +26,25 @@ GEOMETRIES: dict[str, systolic.SAGeometry] = {
     "mxu128": systolic.MXU_SA,
 }
 
-SEGMENTS: dict[str, tuple[int, ...]] = {
-    "mantissa": bic.MANTISSA_ONLY,
-    "mant+exp": bic.MANT_EXP,
-    "full": bic.FULL_BUS,
-    "exponent": bic.EXPONENT_ONLY,
-}
+#: alias of the canonical registry in :mod:`repro.core.bic`
+SEGMENTS = bic.NAMED_SEGMENTS
 
 
 def make_capture_config(geometry: str = "paper16",
                         segments: str = "mantissa",
                         max_batch: int = 4,
-                        max_calls_per_site: int = 4) -> CaptureConfig:
-    """CaptureConfig from sweep-axis names."""
-    mcfg = monitor.MonitorConfig(geometry=GEOMETRIES[geometry],
-                                 bic_segments=SEGMENTS[segments])
+                        max_calls_per_site: int = 4,
+                        designs: tuple[str, ...] = ()) -> CaptureConfig:
+    """CaptureConfig from sweep-axis names.
+
+    ``designs`` (names from :func:`repro.design.named_designs`) switches
+    the capture to an explicit N-design list sharing ``geometry``;
+    without it the paper pair implied by ``segments`` is priced.
+    """
+    geom = GEOMETRIES[geometry]
+    mcfg = monitor.MonitorConfig(
+        geometry=geom, bic_segments=SEGMENTS[segments],
+        designs=resolve_designs(designs, geom) if designs else ())
     return CaptureConfig(monitor=mcfg, max_batch=max_batch,
                          max_calls_per_site=max_calls_per_site)
 

@@ -1,0 +1,376 @@
+"""Tests for the repro.design API: DesignPoint evaluation and selection.
+
+The load-bearing properties:
+  * golden equivalence -- evaluating ``[PAPER_BASELINE, PAPER_PROPOSED]``
+    through the N-design path reproduces the pre-design-API ``sa_power``
+    energies BIT-FOR-BIT on fixed seeds (the hardcoded goldens below were
+    recorded from the seed implementation, so they protect the calibrated
+    ResNet50/MobileNet headline numbers across refactors);
+  * evaluation is per-design independent: order-invariant over the design
+    list, and a single-design evaluation equals the corresponding slice
+    of a multi-design evaluation (hypothesis-property tested);
+  * a custom EnergyModel threads through MonitorConfig into every
+    monitoring path (it used to be silently dropped);
+  * per-site greedy selection on a traced CNN beats (>=) the fixed
+    paper-proposed design and picks a different coding somewhere.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import design as D
+from repro.core import bic, monitor, power, systolic
+
+from _hypothesis_compat import given, settings, st
+
+
+def _layer(zf=0.5, m=48, k=256, n=32, seed=0, relu=True):
+    rng = np.random.default_rng(seed)
+    A = rng.standard_normal((m, k)).astype(np.float32)
+    if relu:
+        A = np.abs(A)
+    A = np.where(rng.random(A.shape) < zf, 0.0, A)
+    W = (rng.standard_normal((k, n)) * 0.05).astype(np.float32)
+    return jnp.asarray(A), jnp.asarray(W)
+
+
+# ------------------------------------------------------- golden equivalence
+#: (layer kwargs, baseline total, proposed total, baseline streaming,
+#:  proposed streaming, proposed overhead) -- recorded fJ values from the
+#: pre-design-API implementation at these exact seeds
+GOLDEN_DEFAULT = [
+    (dict(zf=0.5, m=48, k=256, n=32, seed=0),
+     438048960.0, 381358336.0, 106320384.0, 74592000.0, 2042288.0),
+    (dict(zf=0.0, m=17, k=64, n=16, seed=1),
+     37374048.0, 36782112.0, 6406656.0, 5982336.0, 171965.203125),
+    (dict(zf=0.85, m=64, k=512, n=64, seed=2),
+     1409971712.0, 1215436288.0, 396206592.0, 294216192.0, 9508606.0),
+    (dict(zf=0.3, m=128, k=128, n=128, seed=3),
+     2810001920.0, 2558592512.0, 592296960.0, 445347840.0, 11708837.0),
+]
+
+
+@pytest.mark.parametrize("case", GOLDEN_DEFAULT, ids=lambda c: str(c[0]))
+def test_golden_paper_pair_bit_for_bit(case):
+    kw, bt, pt, bs, ps, oh = case
+    A, W = _layer(**kw)
+    # legacy twin path
+    pw = power.sa_power(systolic.sa_stream_report(A, W))
+    assert float(pw["baseline"]["total"]) == bt
+    assert float(pw["proposed"]["total"]) == pt
+    assert float(pw["baseline"]["streaming"]) == bs
+    assert float(pw["proposed"]["streaming"]) == ps
+    assert float(pw["proposed"]["overhead"]) == oh
+    # N-design path on the same operands
+    ev = D.evaluate_operands(A, W, D.PAPER_PAIR)
+    assert float(ev["baseline"]["energy"]["total"]) == bt
+    assert float(ev["proposed"]["energy"]["total"]) == pt
+    assert float(ev["baseline"]["energy"]["streaming"]) == bs
+    assert float(ev["proposed"]["energy"]["streaming"]) == ps
+    assert float(ev["proposed"]["energy"]["overhead"]) == oh
+
+
+#: goldens at non-default geometry / segments / zvg knobs
+GOLDEN_KNOBS = [
+    ((systolic.MXU_SA, bic.MANTISSA_ONLY, True),
+     5416253952.0, 4944164864.0, 635043840.0),
+    ((systolic.PAPER_SA, bic.MANT_EXP, True),
+     2857978624.0, 2530160640.0, 476116992.0),
+    ((systolic.PAPER_SA, bic.FULL_BUS, False),
+     2857978624.0, 2867467008.0, 658734336.0),
+]
+
+
+@pytest.mark.parametrize("case", GOLDEN_KNOBS,
+                         ids=["mxu", "mant+exp", "full-noZVG"])
+def test_golden_knobbed_pairs_bit_for_bit(case):
+    (geom, segs, zvg), bt, pt, ps = case
+    rng = np.random.default_rng(5)
+    A = np.abs(rng.standard_normal((96, 256))).astype(np.float32)
+    A[rng.random(A.shape) < 0.4] = 0.0
+    W = (rng.standard_normal((256, 96)) * 0.05).astype(np.float32)
+    A, W = jnp.asarray(A), jnp.asarray(W)
+    rep = systolic.sa_stream_report(A, W, geom, segs, zvg)
+    pw = power.sa_power(rep)
+    assert float(pw["baseline"]["total"]) == bt
+    assert float(pw["proposed"]["total"]) == pt
+    assert float(pw["proposed"]["streaming"]) == ps
+    ev = D.evaluate_operands(A, W, D.paper_pair(geom, segs, zvg))
+    assert float(ev["baseline"]["energy"]["total"]) == bt
+    assert float(ev["proposed"]["energy"]["streaming"]) == ps
+    if zvg:
+        assert float(ev["proposed"]["energy"]["total"]) == pt
+    else:
+        # documented semantic difference: legacy zvg_enabled=False models
+        # the proposed HARDWARE with gating idle (zero detectors still
+        # charged); a DesignPoint without ZVG has no detectors at all
+        zdet = (power.DEFAULT_ENERGY.E_ZDET * float(rep["zdet_words"]))
+        np.testing.assert_allclose(float(ev["proposed"]["energy"]["total"]),
+                                   pt - zdet, rtol=1e-6)
+
+
+def test_evaluate_matches_sa_power_componentwise():
+    A, W = _layer(seed=11)
+    ev = D.evaluate_operands(A, W, D.PAPER_PAIR)
+    pw = power.sa_power(systolic.sa_stream_report(A, W))
+    for name in ("baseline", "proposed"):
+        for comp, v in pw[name].items():
+            assert float(ev[name]["energy"][comp]) == float(v), (name, comp)
+
+
+# ------------------------------------------------------------- design spec
+def test_design_point_validation():
+    with pytest.raises(ValueError):
+        D.DesignPoint("has/slash")
+    with pytest.raises(ValueError):
+        D.DesignPoint("")
+    with pytest.raises(ValueError):
+        D.Coding(bic=())
+    # duplicate names rejected at evaluation
+    A, W = _layer(m=16, k=32, n=16)
+    with pytest.raises(ValueError, match="duplicate"):
+        D.evaluate_operands(A, W, (D.PAPER_BASELINE, D.PAPER_BASELINE))
+
+
+def test_mixed_geometry_designs_require_evaluate_operands():
+    A, W = _layer(m=16, k=32, n=16)
+    d16 = D.PAPER_PROPOSED
+    d32 = D.PAPER_PROPOSED.with_(name="prop32",
+                                 geometry=systolic.SAGeometry(32, 32))
+    menu = systolic.sa_design_report(A, W)
+    with pytest.raises(ValueError, match="geometries"):
+        D.evaluate(menu, (d16, d32))
+    ev = D.evaluate_operands(A, W, (d16, d32))
+    assert set(ev) == {"proposed", "prop32"}
+
+
+def test_stacked_west_coding_prices_and_helps_sparse_streams():
+    """bic+zvg on the input edge: fewer h-toggles than zvg alone on a
+    sparse stream (BIC encodes the held stream), at extra encoder cost."""
+    A, W = _layer(zf=0.7, seed=13)
+    stacked = D.DesignPoint("stacked", west=D.BIC(zvg=True), north=D.BIC())
+    zvg_only = D.DesignPoint("zvgonly", west=D.ZVG, north=D.BIC())
+    ev = D.evaluate_operands(A, W, (D.PAPER_BASELINE, zvg_only, stacked))
+    assert float(ev["stacked"]["h"]) < float(ev["zvgonly"]["h"])
+    assert (float(ev["stacked"]["energy"]["overhead"])
+            > float(ev["zvgonly"]["energy"]["overhead"]))
+
+
+def test_north_zvg_gates_weight_zeros():
+    """A design gating the WEIGHT edge: zeros along the streaming (K)
+    axis compress the held-register sequence, reducing v-toggles and
+    clock energy vs baseline."""
+    A, _ = _layer(zf=0.0, seed=17)
+    rng = np.random.default_rng(21)
+    W = (rng.standard_normal((256, 32)) * 0.05).astype(np.float32)
+    W[::2, :] = 0.0          # every other streamed weight word is zero
+    W = jnp.asarray(W)
+    nz = D.DesignPoint("northzvg", north=D.Coding(zvg=True))
+    ev = D.evaluate_operands(A, W, (D.PAPER_BASELINE, nz))
+    assert float(ev["northzvg"]["v"]) < float(ev["baseline"]["v"])
+    assert (float(ev["northzvg"]["energy"]["clock"])
+            < float(ev["baseline"]["energy"]["clock"]))
+
+
+# ----------------------------------------------------- evaluation structure
+NAMES = sorted(D.named_designs())
+
+
+@settings(max_examples=10, deadline=None)
+@given(perm=st.permutations(NAMES), seed=st.integers(0, 2**16))
+def test_evaluate_order_invariant_and_sliceable(perm, seed):
+    """Order invariance over the design list + single-design evaluation
+    equals the corresponding slice of the multi-design evaluation."""
+    A, W = _layer(m=16, k=64, n=16, seed=seed)
+    menu = D.named_designs()
+    full = D.evaluate_operands(A, W, tuple(menu[n] for n in NAMES))
+    permuted = D.evaluate_operands(A, W, tuple(menu[n] for n in perm))
+    single = D.evaluate_operands(A, W, (menu[perm[0]],))
+    for name in NAMES:
+        for comp, v in full[name]["energy"].items():
+            assert float(permuted[name]["energy"][comp]) == float(v)
+    for comp, v in full[perm[0]]["energy"].items():
+        assert float(single[perm[0]]["energy"][comp]) == float(v)
+
+
+def test_savings_reference_is_first_design():
+    A, W = _layer(seed=23)
+    ev = D.evaluate_operands(A, W, D.PAPER_PAIR)
+    sv = D.savings(ev)
+    assert sv["baseline"]["saving_total"] == 0.0
+    pw = power.sa_power(systolic.sa_stream_report(A, W))
+    np.testing.assert_allclose(sv["proposed"]["saving_total"],
+                               float(pw["saving_total"]), atol=1e-6)
+
+
+# -------------------------------------------------- monitor design-keying
+def test_stream_counters_design_keyed_and_compatible():
+    A, W = _layer(m=32, k=128, n=32, seed=3)
+    c = monitor.stream_counters(A, W)
+    e = monitor.counters_to_energy({k: float(v) for k, v in c.items()})
+    assert set(e) == {"baseline", "proposed"}
+    pw = power.sa_power(systolic.sa_stream_report(A, W))
+    for name in e:
+        for comp, v in pw[name].items():
+            np.testing.assert_allclose(e[name][comp], float(v), rtol=1e-6)
+
+
+def test_counters_to_energy_accepts_legacy_flat_keys():
+    legacy = {"eb_total": 10.0, "eb_streaming": 4.0,
+              "ep_total": 8.0, "ep_streaming": 2.0, "ep_overhead": 1.0}
+    e = monitor.counters_to_energy(legacy, scale=2.0)
+    assert e["baseline"]["total"] == 20.0
+    assert e["proposed"]["overhead"] == 2.0
+
+
+def test_multi_design_monitor_config():
+    A, W = _layer(m=32, k=128, n=32, seed=4)
+    designs = tuple(D.named_designs().values())
+    cfg = monitor.MonitorConfig(designs=designs)
+    assert cfg.design_names == tuple(D.named_designs())
+    assert cfg.reference_design == "baseline"
+    assert cfg.primary_design == "proposed"
+    c = monitor.stream_counters(A, W, cfg)
+    e = monitor.counters_to_energy({k: float(v) for k, v in c.items()})
+    assert set(e) == set(cfg.design_names)
+    ev = D.evaluate_operands(A, W, designs)
+    for name in e:
+        np.testing.assert_allclose(
+            e[name]["total"], float(ev[name]["energy"]["total"]), rtol=1e-6)
+
+
+def test_energy_model_threads_through_monitor():
+    """A custom EnergyModel must change monitored energies exactly as it
+    changes a direct sa_power evaluation (it used to be dropped)."""
+    A, W = _layer(m=32, k=128, n=32, seed=5)
+    em = dataclasses.replace(power.DEFAULT_ENERGY, E_WIRE_BIT=90.0,
+                             E_ENC=600.0)
+    cfg = monitor.MonitorConfig(energy=em)
+    c = monitor.counters_to_energy({
+        k: float(v) for k, v in monitor.stream_counters(A, W, cfg).items()})
+    want = power.sa_power(systolic.sa_stream_report(A, W), em)
+    for name in ("baseline", "proposed"):
+        for comp, v in want[name].items():
+            np.testing.assert_allclose(c[name][comp], float(v), rtol=1e-6,
+                                       err_msg=f"{name}/{comp}")
+    # and it actually differs from the default model
+    dflt = monitor.counters_to_energy({
+        k: float(v) for k, v in monitor.stream_counters(A, W).items()})
+    assert c["baseline"]["total"] != dflt["baseline"]["total"]
+    pw = monitor.monitor_streams(A, W, cfg)["power"]
+    np.testing.assert_allclose(float(pw["baseline"]["total"]),
+                               float(want["baseline"]["total"]), rtol=1e-6)
+
+
+# ------------------------------------------------------------- selection
+def test_select_sites_greedy_and_bounded():
+    sites = {
+        "a": {"baseline": {"total": 100.0}, "proposed": {"total": 90.0},
+              "alt": {"total": 95.0}},
+        "b": {"baseline": {"total": 100.0}, "proposed": {"total": 97.0},
+              "alt": {"total": 80.0}},
+    }
+    sel = D.select_sites(sites)
+    assert sel.choices == {"a": "proposed", "b": "alt"}
+    assert sel.changed == {"b": "alt"}
+    assert sel.saving_total == pytest.approx(1.0 - 170.0 / 200.0)
+    assert sel.saving_primary == pytest.approx(1.0 - 187.0 / 200.0)
+    assert sel.saving_total >= sel.saving_primary
+    # candidate restriction
+    sel2 = D.select_sites(sites, candidates=("baseline", "proposed"))
+    assert sel2.choices == {"a": "proposed", "b": "proposed"}
+    with pytest.raises(KeyError):
+        D.select_sites(sites, candidates=("missing",))
+
+
+def test_selection_on_traced_cnn_beats_fixed_design():
+    """Acceptance demo: per-site selection on the traced ResNet50 saves
+    >= the fixed PAPER_PROPOSED design and at least one site selects a
+    different coding than the paper default."""
+    from repro import trace as T
+    from repro.trace.sweep import make_capture_config
+
+    cfg = make_capture_config(designs=tuple(D.named_designs()))
+    rep = T.trace_cnn("resnet50", res=64, cfg=cfg)
+    assert set(rep.designs) == set(D.named_designs())
+    sel = D.apply_selection(rep)
+    assert sel.saving_total >= sel.saving_primary
+    assert len(sel.changed) >= 1
+    # the selected pseudo-design rides through report machinery
+    assert "selected" in rep.designs
+    agg_sel = rep.aggregate_design("selected")
+    agg_fix = rep.aggregate_design("proposed")
+    assert agg_sel["total_saving"] >= agg_fix["total_saving"]
+    np.testing.assert_allclose(agg_sel["total_saving"], sel.saving_total,
+                               rtol=1e-6)
+    # table shows the per-site winners
+    table = rep.table()
+    assert "best" in table
+    changed_site, chosen = next(iter(sel.changed.items()))
+    assert chosen in table
+
+
+def test_monitor_streams_rejects_explicit_design_list():
+    """The legacy twin wrapper cannot express N designs; it must refuse
+    rather than silently price the paper pair."""
+    A, W = _layer(m=16, k=32, n=16)
+    cfg = monitor.MonitorConfig(
+        designs=(D.PAPER_BASELINE, D.PAPER_PROPOSED))
+    with pytest.raises(ValueError, match="legacy twin-design"):
+        monitor.monitor_streams(A, W, cfg)
+
+
+def test_accountant_finish_without_records_is_well_formed():
+    """A request retired before any counters were recorded must still
+    yield a zero-filled (not empty) per-design energy report."""
+    from repro.serve.power import PowerAccountant
+
+    acct = PowerAccountant()
+    acct.begin(0, uid=1, prompt_tokens=4)
+    r = acct.finish(0, new_tokens=0)
+    assert set(r.energy) == {"baseline", "proposed"}
+    assert r.energy["baseline"]["total"] == 0.0
+    s = r.summary()   # no KeyError on any accessor
+    assert s["energy_base_fj"] == 0.0
+    assert r.streaming_share == 0.0
+
+
+def test_trace_report_loads_pre_design_api_json():
+    """JSON exports written before the design API (sites with flat
+    energy_base/... fields, no 'designs' dict) must still load."""
+    from repro.trace import TraceReport
+
+    old = {
+        "model": "legacy", "geometry": [16, 16], "bic_segments": [127],
+        "skipped": [],
+        "sites": [{
+            "name": "l0", "kind": "conv", "shape": [1, 8, 16, 8],
+            "calls": 1, "sampled_calls": 1, "macs": 1024.0,
+            "zero_fraction": 0.5, "activity_reduction": 0.25,
+            "saving_total": 0.1, "saving_streaming": 0.2,
+            "streaming_share": 0.3, "energy_base": 100.0,
+            "energy_prop": 90.0, "energy_base_streaming": 30.0,
+            "energy_prop_streaming": 24.0}],
+    }
+    rep = TraceReport.from_json_dict(old)
+    (site,) = rep.sites
+    assert rep.designs == ("baseline", "proposed")
+    assert site.energy_base == 100.0 and site.energy_prop == 90.0
+    assert site.saving_total == pytest.approx(0.1)
+    assert site.saving_streaming == pytest.approx(0.2)
+    assert site.activity_reduction == pytest.approx(0.25)
+    assert rep.aggregate()["total_saving"] == pytest.approx(0.1)
+
+
+def test_selection_equals_fixed_when_only_pair_traced():
+    from repro import trace as T
+
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((16, 8)),
+                    jnp.float32)
+    rep = T.trace_model(lambda x: x @ w, _layer(m=8, k=16, n=8)[0][:8],
+                        name="pair")
+    sel = D.apply_selection(rep)
+    assert sel.saving_total >= sel.saving_primary
+    assert set(sel.choices.values()) <= {"baseline", "proposed"}
