@@ -4,11 +4,20 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test trace-smoke serve-smoke design-smoke bench-quick ci
+.PHONY: test kernel-test trace-smoke serve-smoke design-smoke \
+	bench-quick ci
 
-# tier-1: the whole test suite, fail fast
+# tier-1: the whole test suite, fail fast, with the 15 slowest tests
+# reported so suite-runtime regressions are visible in every CI log
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q --durations=15
+
+# Pallas kernel suites (interpret mode): per-kernel allclose tests plus
+# the fused power-counter differential harness, with runtime report
+kernel-test:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q --durations=15 \
+	    tests/test_kernels.py tests/test_power_counter_kernels.py \
+	    tests/test_hypothesis_shim.py
 
 # end-to-end smoke of the model-wide power tracer on the smallest config
 trace-smoke:

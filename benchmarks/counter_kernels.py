@@ -1,0 +1,94 @@
+"""Fused Pallas counter kernels vs the per-menu-entry reference path.
+
+The tentpole claim of the ``kernels/power_counters`` work: monitoring a
+stream no longer costs O(menu) passes over the operands. This benchmark
+times :func:`repro.core.systolic.sa_design_report` -- the single entry
+every monitoring path (monitor / trace / serve / design.evaluate) funnels
+through -- under both backends across geometry x menu size, on the same
+operands:
+
+* ``ref``    -- the pure-JAX reference: one pass per menu entry (a
+  sequential ``lax.scan`` per BIC variant per edge, plus the raw and
+  zero-held passes), i.e. the pre-kernel implementation shape.
+* ``pallas`` -- the fused kernel: every counter of the whole menu in one
+  tiled pass per edge.
+
+On this CPU container the kernel runs in interpret mode (the identical
+kernel body through the Pallas interpreter); on a real TPU the Mosaic
+lowering uses the parallel associative-scan form and the gap widens --
+the ref path's encoder scans serialize the T axis while the fused kernel
+stays log-depth.
+
+The acceptance row is ``counters_128x128_menu4``: the fused pass must
+beat the per-menu-entry path on a >= 128x128 geometry with a >= 4-entry
+menu.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bic, systolic
+
+from .common import row, timed
+
+#: menu-size axis: cumulative slices of the named segment menu
+MENUS: dict[int, tuple[tuple[int, ...], ...]] = {
+    n: tuple(bic.NAMED_SEGMENTS.values())[:n] for n in (1, 2, 4)
+}
+
+GEOMS = {"16x16": systolic.PAPER_SA, "128x128": systolic.MXU_SA}
+
+
+def _operands(m: int, k: int, n: int, zf: float = 0.5):
+    rng = np.random.default_rng(11)
+    A = np.abs(rng.standard_normal((m, k))).astype(np.float32)
+    A[rng.random(A.shape) < zf] = 0.0
+    W = (rng.standard_normal((k, n)) * 0.05).astype(np.float32)
+    return jnp.asarray(A), jnp.asarray(W)
+
+
+def main(quick: bool = False) -> None:
+    print("# fused counter kernel vs per-menu-entry reference "
+          "(sa_design_report wall-clock, both edges fully tabulated)")
+    # operand size is NOT reduced in quick mode: at toy sizes both
+    # backends finish in microseconds and the comparison is pure timer
+    # noise -- quick mode trims the grid instead
+    m, k, n = 512, 1024, 512
+    iters = 3 if quick else 10
+    A, W = _operands(m, k, n)
+    print(f"# operands {m}x{k} @ {k}x{n}, bf16, zero-fraction ~0.5, "
+          f"backend device = {jax.default_backend()}")
+
+    accept = None
+    for gname, geom in GEOMS.items():
+        if quick and gname != "128x128":
+            continue
+        for msize, menu in MENUS.items():
+            if quick and msize not in (1, 4):
+                continue
+            us = {}
+            for backend in ("ref", "pallas"):
+                def run():
+                    rep = systolic.sa_design_report(
+                        A, W, geom, west_bic=menu, north_bic=menu,
+                        west_zvg=True, north_zvg=True, backend=backend)
+                    jax.block_until_ready(rep["w_raw"])
+                    return rep
+                _, us[backend] = timed(run, iters=iters)
+            speedup = us["ref"] / us["pallas"]
+            name = f"counters_{gname}_menu{msize}"
+            row(name, us["pallas"],
+                f"ref={us['ref']:.0f}us speedup={speedup:.2f}x")
+            if gname == "128x128" and msize >= 4:
+                accept = speedup
+    if accept is not None:
+        verdict = "CONFIRMED" if accept > 1.0 else "REFUTED"
+        print(f"#   acceptance: fused beats per-menu-entry ref at "
+              f"128x128 with a 4-entry menu -> {verdict} "
+              f"({accept:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,13 @@ NAMED_SEGMENTS: dict[str, tuple[int, ...]] = {
 }
 
 
+def seg_key(segments: Segments) -> str:
+    """Canonical menu-key suffix for a BIC segment tuple (the single
+    authority; :mod:`repro.core.systolic` and the counter kernels both
+    key their per-variant outputs with it)."""
+    return "+".join(f"{int(s) & 0xFFFF:04x}" for s in segments)
+
+
 def _check_segments(segments: Segments) -> tuple[int, ...]:
     segs = tuple(int(s) & 0xFFFF for s in segments)
     if not segs:

@@ -52,9 +52,9 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 # imports here must be lazy to keep both import orders working.
 
 
-def _evaluate_operands(A, W, designs):
+def _evaluate_operands(A, W, designs, backend=None):
     from repro.design.evaluate import evaluate_operands
-    return evaluate_operands(A, W, designs)
+    return evaluate_operands(A, W, designs, backend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,12 +67,21 @@ class MonitorConfig:
     configs keep meaning exactly what they meant, and ``energy`` is now
     honoured everywhere (it used to be silently dropped by monitoring
     paths that called ``sa_power`` with the default model).
+
+    ``backend`` selects the stream-counter implementation for every
+    monitoring path that prices this config -- ``"pallas"`` (the fused
+    :mod:`repro.kernels.power_counters` kernel), ``"ref"`` (the pure-JAX
+    reference), or ``"auto"``/None (fused on TPU, reference elsewhere).
+    The backends are bit-identical (differential-tested), so this knob
+    only moves the compute; trace capture and serve accounting inherit
+    it through the config with no API change.
     """
     geometry: systolic.SAGeometry = systolic.PAPER_SA
     bic_segments: tuple[int, ...] = bic.MANTISSA_ONLY
     zvg: bool = True
     energy: power.EnergyModel = power.DEFAULT_ENERGY
     designs: tuple["DesignPoint", ...] = ()
+    backend: str | None = None
     max_rows: int = 256     # sample cap along M (input streams)
     max_cols: int = 256     # sample cap along N (weight streams)
     max_depth: int = 1024   # sample cap along K (stream length)
@@ -172,7 +181,8 @@ def monitor_streams(A: jax.Array, W: jax.Array,
             "stream_counters (flat per-design counters) or "
             "repro.design.evaluate_operands")
     rep = systolic.sa_stream_report(
-        A, W, cfg.geometry, tuple(cfg.bic_segments), cfg.zvg)
+        A, W, cfg.geometry, tuple(cfg.bic_segments), cfg.zvg,
+        backend=cfg.backend)
     pw = power.sa_power(rep, cfg.energy)
     return {"report": rep, "power": pw}
 
@@ -200,7 +210,7 @@ def stream_counters(A: jax.Array, W: jax.Array,
     rule incrementally, which is how per-step accumulation (serving)
     stays consistent with whole-call tracing.
     """
-    ev = _evaluate_operands(A, W, cfg.design_list)
+    ev = _evaluate_operands(A, W, cfg.design_list, cfg.backend)
     flat = {}
     for name, r in ev.items():
         for comp, v in r["energy"].items():
@@ -239,17 +249,32 @@ def counters_to_energy(counters: dict, scale: float = 1.0) -> dict:
     what keeps the old twin-dict call sites working unchanged).
 
     Accepts both the design-namespaced keys of :func:`stream_counters`
-    and the pre-design-API ``eb_*``/``ep_*`` flat keys.
+    and the pre-design-API ``eb_*``/``ep_*`` flat keys. For the legacy
+    keys it reproduces the pre-design-API contract exactly: the known
+    component sets (:data:`BASE_COMPONENTS` / :data:`PROP_COMPONENTS`)
+    are always COMPLETE in the output, with absent counters zero-filled
+    -- downstream aggregation (``power.aggregate_savings``, report
+    accessors) indexes components unconditionally, so a partial legacy
+    dict must yield zeros, not ``KeyError``.
     """
     out: dict[str, dict[str, float]] = {}
+    legacy = False
     for key, v in counters.items():
         if key.startswith("e/"):
             _, name, comp = key.split("/", 2)
             out.setdefault(name, {})[comp] = float(v) * scale
         elif key.startswith("eb_"):
+            legacy = True
             out.setdefault("baseline", {})[key[3:]] = float(v) * scale
         elif key.startswith("ep_"):
+            legacy = True
             out.setdefault("proposed", {})[key[3:]] = float(v) * scale
+    if legacy:
+        for name, comps in (("baseline", BASE_COMPONENTS),
+                            ("proposed", PROP_COMPONENTS)):
+            known = out.setdefault(name, {})
+            for c in comps:
+                known.setdefault(c, 0.0)
     return out
 
 
@@ -283,7 +308,7 @@ def monitor_matmul(acts: jax.Array, weights: jax.Array,
       sample sizes actually streamed through the model.
     """
     A, W = subsample_operands(acts, weights, cfg)
-    ev = _evaluate_operands(A, W, cfg.design_list)
+    ev = _evaluate_operands(A, W, cfg.design_list, cfg.backend)
     ref = ev[cfg.reference_design]
     pri = ev[cfg.primary_design]
     sizes = sample_sizes(acts.shape, weights.shape, cfg)

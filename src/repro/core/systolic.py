@@ -28,7 +28,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from . import activity, bic, bits as B, zvg
+from . import activity, bic
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,65 +53,70 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def seg_key(segments: Sequence[int]) -> str:
-    """Canonical menu-key suffix for a BIC segment tuple."""
-    return "+".join(f"{int(s) & 0xFFFF:04x}" for s in segments)
+#: canonical menu-key suffix for a BIC segment tuple (re-exported from
+#: :mod:`repro.core.bic`, the single authority)
+seg_key = bic.seg_key
 
 
 def _edge_menu(bits: jax.Array, prefix: str,
                bic_variants: tuple[tuple[int, ...], ...],
-               with_zvg: bool) -> dict:
+               with_zvg: bool, backend: str | None,
+               interpret: bool | None):
     """Coding menu for one edge's ``uint16[T, lanes]`` stream.
 
-    Emits, per lane set summed to f32 scalars: the raw and mantissa-field
-    transition counts, one BIC transition count per requested segment
-    variant, and -- when ``with_zvg`` -- the zero-held (gated) variants of
-    all of the above plus the is-zero-line toggles. These are the
-    coding-agnostic primitives :func:`repro.design.evaluate.design_energy`
-    prices any :class:`~repro.design.DesignPoint` from.
+    ONE fused counter pass (:func:`repro.kernels.power_counters.
+    edge_counters` -- the Pallas kernel or its pure-JAX reference,
+    selected by ``backend``) tabulates every per-lane counter; this
+    shim sums lanes to the f32 scalars the menu stores: raw and
+    mantissa-field transition counts, one BIC transition count per
+    requested segment variant (encoded-data + invert-line toggles), and
+    -- when ``with_zvg`` -- the zero-held (gated) variants of all of the
+    above plus the is-zero-line toggles. These are the coding-agnostic
+    primitives :func:`repro.design.evaluate.design_energy` prices any
+    :class:`~repro.design.DesignPoint` from.
+
+    Returns ``(menu dict, per-cycle zero counts int32[T])``.
     """
+    # repro.kernels imports repro.core (bits/bic/zvg), so this import
+    # must be lazy to keep both package import orders working.
+    from repro.kernels import power_counters as pc
+
+    spec = pc.CounterSpec(bic_variants=bic_variants, zvg=with_zvg)
+    rows = pc.edge_counters(bits, spec, backend=backend,
+                            interpret=interpret)
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     out = {}
-    out[f"{prefix}_raw"] = f32(activity.stream_transitions(bits)).sum()
-    out[f"{prefix}_mant_raw"] = f32(activity.stream_transitions(
-        bits, int(B.MANT_MASK))).sum()
+    out[f"{prefix}_raw"] = f32(rows["raw"]).sum()
+    out[f"{prefix}_mant_raw"] = f32(rows["mant_raw"]).sum()
     if with_zvg:
-        # ONE scan materializes the held-register sequence; every gated
-        # counter (full/mantissa transitions, is-zero line) and any
-        # bic+zvg variant derives from it vectorized, with integer
-        # results identical to zvg.zvg_stream_report's
-        held = zvg.zero_held_stream(bits)
-        prev = jnp.concatenate(
-            [jnp.zeros_like(held[:1]), held[:-1]], axis=0)
-        out[f"{prefix}_zvg"] = f32(B.hamming(held, prev).sum(axis=0)).sum()
-        out[f"{prefix}_mant_zvg"] = f32(
-            B.hamming(held, prev, B.MANT_MASK).sum(axis=0)).sum()
-        z = zvg.is_zero(bits)
-        prev_z = jnp.concatenate(
-            [jnp.zeros_like(z[:1]), z[:-1]], axis=0)
-        out[f"{prefix}_iszero"] = f32(
-            (z ^ prev_z).astype(jnp.int32).sum(axis=0)).sum()
+        out[f"{prefix}_zvg"] = f32(rows["zvg"]).sum()
+        out[f"{prefix}_mant_zvg"] = f32(rows["mant_zvg"]).sum()
+        out[f"{prefix}_iszero"] = f32(rows["iszero"]).sum()
     for segs in bic_variants:
-        out[f"{prefix}_bic/{seg_key(segs)}"] = f32(
-            bic.bic_transitions(bits, segs)).sum()
+        k = seg_key(segs)
+        out[f"{prefix}_bic/{k}"] = f32(
+            rows[f"bic/{k}/data"] + rows[f"bic/{k}/inv"]).sum()
         if with_zvg:
-            out[f"{prefix}_bic_zvg/{seg_key(segs)}"] = f32(
-                bic.bic_transitions(held, segs)).sum()
-    return out
+            out[f"{prefix}_bic_zvg/{k}"] = f32(
+                rows[f"bic_zvg/{k}/data"] + rows[f"bic_zvg/{k}/inv"]).sum()
+    return out, rows["rowzeros"]
 
 
 @partial(jax.jit, static_argnames=("geom", "west_bic", "north_bic",
-                                   "west_zvg", "north_zvg"))
+                                   "west_zvg", "north_zvg", "backend",
+                                   "interpret"))
 def sa_design_report(A: jax.Array, Bm: jax.Array,
                      geom: SAGeometry = PAPER_SA,
                      west_bic: tuple[tuple[int, ...], ...] = (),
                      north_bic: tuple[tuple[int, ...], ...] = (
                          bic.MANTISSA_ONLY,),
                      west_zvg: bool = True,
-                     north_zvg: bool = False) -> dict:
+                     north_zvg: bool = False,
+                     backend: str | None = None,
+                     interpret: bool | None = None) -> dict:
     """Coding-agnostic stream counters for one tiled matmul on the SA.
 
-    One pass over the operands computes a *menu* of per-edge counters --
+    One fused pass per operand edge computes a *menu* of counters --
     raw / BIC(segment-variant) / zero-gated / BIC-over-gated transition
     counts for the West (input) and North (weight) streams -- plus the
     coding-independent facts (tile counts, MAC slots, zero statistics).
@@ -126,6 +131,12 @@ def sa_design_report(A: jax.Array, Bm: jax.Array,
       geom: array geometry (determines padding, so also the stream lanes).
       west_bic / north_bic: BIC segment variants to tabulate per edge.
       west_zvg / north_zvg: tabulate the zero-gated menu for the edge.
+      backend: ``"pallas"`` (fused kernel) / ``"ref"`` (pure JAX) /
+        ``"auto"`` / None (process default; see
+        :mod:`repro.kernels.power_counters.ops`). Both backends are
+        bit-identical (differential-tested), so this only moves the
+        compute.
+      interpret: force/suppress Pallas interpret mode (None = auto).
 
     Returns a flat dict of f32 scalars (f32 to avoid int32 overflow on
     large layers; relative error < 1e-6 at these magnitudes).
@@ -145,18 +156,18 @@ def sa_design_report(A: jax.Array, Bm: jax.Array,
 
     a_bits = activity.matrix_stream_bits(Ap, axis=1)       # [K, M']
     b_bits = activity.matrix_stream_bits(Bp, axis=0)       # [K, N']
-    out = _edge_menu(a_bits, "w", tuple(west_bic), west_zvg)
-    out.update(_edge_menu(b_bits, "n", tuple(north_bic), north_zvg))
+    out, az_rows = _edge_menu(a_bits, "w", tuple(west_bic), west_zvg,
+                              backend, interpret)
+    n_menu, nz_rows = _edge_menu(b_bits, "n", tuple(north_bic), north_zvg,
+                                 backend, interpret)
+    out.update(n_menu)
 
     # --- coding-independent facts ----------------------------------------
-    az = zvg.is_zero(a_bits)
-    zeros = f32(az.astype(jnp.int32).sum())    # zero input lane-cycles
-    nz = zvg.is_zero(b_bits)
-    zeros_n = f32(nz.astype(jnp.int32).sum())  # zero weight lane-cycles
+    zeros = f32(az_rows.sum())     # zero input lane-cycles
+    zeros_n = f32(nz_rows.sum())   # zero weight lane-cycles
     # exact count of MAC slots where BOTH operands are zero (needed when a
     # design gates both edges; inclusion-exclusion on the gated slots)
-    overlap = (f32(az.astype(jnp.int32).sum(axis=1))
-               * f32(nz.astype(jnp.int32).sum(axis=1))).sum()
+    overlap = (f32(az_rows) * f32(nz_rows)).sum()
 
     pe_slots = f32(Mp) * Np * K                  # total MAC slots
     active_frac = 1.0 - zeros / (f32(Mp) * K)    # mean input-active fraction
@@ -187,11 +198,13 @@ def sa_design_report(A: jax.Array, Bm: jax.Array,
     return out
 
 
-@partial(jax.jit, static_argnames=("geom", "bic_segments", "zvg_enabled"))
+@partial(jax.jit, static_argnames=("geom", "bic_segments", "zvg_enabled",
+                                   "backend"))
 def sa_stream_report(A: jax.Array, Bm: jax.Array,
                      geom: SAGeometry = PAPER_SA,
                      bic_segments: Sequence[int] = bic.MANTISSA_ONLY,
-                     zvg_enabled: bool = True) -> dict:
+                     zvg_enabled: bool = True,
+                     backend: str | None = None) -> dict:
     """Legacy twin-design counters (compat shim over the design menu).
 
     Args:
@@ -209,7 +222,7 @@ def sa_stream_report(A: jax.Array, Bm: jax.Array,
     R, C = geom.rows, geom.cols
     segs = tuple(int(s) for s in bic_segments)
     menu = sa_design_report(A, Bm, geom, west_bic=(), north_bic=(segs,),
-                            west_zvg=True, north_zvg=False)
+                            west_zvg=True, north_zvg=False, backend=backend)
     f32 = lambda v: jnp.asarray(v, jnp.float32)
 
     tran_a_raw = menu["w_raw"]

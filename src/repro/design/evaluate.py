@@ -171,17 +171,21 @@ def evaluate(report: dict, designs: Sequence[DesignPoint]) -> dict:
 
 
 def evaluate_operands(A: jax.Array, W: jax.Array,
-                      designs: Sequence[DesignPoint]) -> dict:
+                      designs: Sequence[DesignPoint],
+                      backend: str | None = None) -> dict:
     """Stream ``[M,K] x [K,N]`` operands and price every design.
 
     One :func:`sa_design_report` pass per distinct geometry (with the
     union of the group's menu needs); every design is then priced from
     its group's menu. jit-compatible for a static design tuple.
+    ``backend`` selects the counter implementation (fused Pallas kernel
+    vs pure-JAX reference; bit-identical, see
+    :mod:`repro.kernels.power_counters`).
     """
     _check_names(designs)
     out: dict = {}
     for geom, kw in menu_args(designs).items():
-        menu = systolic.sa_design_report(A, W, geom, **kw)
+        menu = systolic.sa_design_report(A, W, geom, backend=backend, **kw)
         for d in designs:
             if d.geometry == geom:
                 out[d.name] = design_energy(menu, d)
@@ -189,12 +193,14 @@ def evaluate_operands(A: jax.Array, W: jax.Array,
 
 
 def evaluate_batched(A3: jax.Array, W3: jax.Array,
-                     designs: Sequence[DesignPoint]) -> dict:
+                     designs: Sequence[DesignPoint],
+                     backend: str | None = None) -> dict:
     """Batched form: ``[B,M,K] x [B,K,N]`` independent problems (grouped
     convolutions, batched dot_generals), energies summed over B and the
     non-additive scalars averaged/kept consistent."""
     designs = tuple(designs)
-    per = jax.vmap(lambda a, w: evaluate_operands(a, w, designs))(A3, W3)
+    per = jax.vmap(
+        lambda a, w: evaluate_operands(a, w, designs, backend))(A3, W3)
     out = {}
     for name, r in per.items():
         out[name] = {

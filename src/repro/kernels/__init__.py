@@ -6,5 +6,7 @@ the allclose tests). Kernels are validated with ``interpret=True`` on CPU;
 on TPU hardware pass ``interpret=False`` for the Mosaic lowering.
 """
 from .bic_encode.ops import bic_encode  # noqa: F401
+from .power_counters.ops import edge_counters  # noqa: F401
+from .power_counters.spec import CounterSpec  # noqa: F401
 from .transitions.ops import count_transitions  # noqa: F401
 from .zvg_matmul.ops import zvg_matmul  # noqa: F401

@@ -1,0 +1,6 @@
+"""Fused Pallas power-counter kernels: the whole design-menu counter set
+in one tiled pass per operand edge (see ``spec.py`` for the row layout,
+``kernel.py`` for the parallelized recurrences, ``ref.py`` for the
+pure-JAX oracle the differential suite pins the kernel against)."""
+from .ops import BACKENDS, default_backend, edge_counters, resolve_backend  # noqa: F401
+from .spec import CounterSpec  # noqa: F401

@@ -1,0 +1,63 @@
+"""Pure-JAX oracle for the fused power-counter kernel.
+
+Identical signature and integer-exact semantics, built from the core
+stream primitives (:mod:`repro.core.activity` / ``bic`` / ``zvg``) that
+are themselves property-tested against pure-python references. This IS
+the per-menu-entry path the fused kernel replaces: one separate pass --
+including a sequential ``lax.scan`` per BIC variant -- per counter
+family, which is what ``benchmarks/counter_kernels.py`` measures the
+fused kernel against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import activity, bic, bits as B, zvg
+
+from .spec import WORD_BITS, CounterSpec
+
+
+def _bic_data_inv(stream: jax.Array, segs: tuple[int, ...]):
+    """Encoded-bus data toggles and invert-line toggles, per lane,
+    SEPARATELY (their sum is ``bic.bic_transitions``)."""
+    tx, inv = bic.bic_encode(stream, segs)
+    prev = jnp.concatenate([jnp.zeros_like(tx[:1]), tx[:-1]], axis=0)
+    data = B.hamming(tx, prev).sum(axis=0)
+    ii = inv.astype(jnp.int32)
+    prev_i = jnp.concatenate([jnp.zeros_like(ii[:1]), ii[:-1]], axis=0)
+    invtog = jnp.abs(ii - prev_i).sum(axis=(0, 1))
+    return data, invtog
+
+
+def fused_counters_ref(x: jax.Array, spec: CounterSpec):
+    """Reference counter pass over ``uint16[T, L]``.
+
+    Returns ``(counts: int32[spec.n_rows, L], rowzeros: int32[T])`` --
+    bit-identical to :func:`.kernel.fused_counters_pallas`.
+    """
+    x = x.astype(jnp.uint16)
+    z = zvg.is_zero(x)
+    rows = [
+        activity.stream_transitions(x),
+        activity.stream_transitions(x, int(B.MANT_MASK)),
+        z.astype(jnp.int32).sum(axis=0),
+    ]
+    if spec.zvg:
+        held = zvg.zero_held_stream(x)
+        prev = jnp.concatenate([jnp.zeros_like(held[:1]), held[:-1]], axis=0)
+        z_prev = jnp.concatenate([jnp.zeros_like(z[:1]), z[:-1]], axis=0)
+        rows.append(B.hamming(held, prev).sum(axis=0))
+        rows.append(B.hamming(held, prev, B.MANT_MASK).sum(axis=0))
+        rows.append((z ^ z_prev).astype(jnp.int32).sum(axis=0))
+    for segs in spec.bic_variants:
+        rows.extend(_bic_data_inv(x, segs))
+    if spec.zvg:
+        for segs in spec.bic_variants:
+            rows.extend(_bic_data_inv(held, segs))
+    if spec.hist:
+        for bit in range(WORD_BITS):
+            ones = (x >> jnp.uint16(bit)) & jnp.uint16(1)
+            rows.append(ones.astype(jnp.int32).sum(axis=0))
+    counts = jnp.stack(rows, axis=0)
+    return counts, z.astype(jnp.int32).sum(axis=1)

@@ -1,0 +1,115 @@
+"""CounterSpec: the static row layout of one fused counter pass.
+
+One operand edge of the systolic array is a ``uint16[T, L]`` stream; the
+fused kernel walks it ONCE and emits every counter the design menu can
+ask for, as rows of a dense ``int32[n_rows, L]`` per-lane table. The spec
+is the contract shared by the Pallas kernel, the pure-JAX reference, and
+the public wrapper: it fixes which rows exist and in which order, so the
+kernel's stacked accumulator, the reference's stacked outputs, and the
+host-side name lookup all agree by construction.
+
+Rows (in order):
+
+* ``raw`` / ``mant_raw``          -- unencoded full-bus / mantissa-field
+  transition counts (the conventional-SA toggles).
+* ``zeros``                       -- zero-word count per lane (ZVG
+  zero-held cycles; always present, every design needs zero statistics).
+* ``zvg`` / ``mant_zvg`` / ``iszero``  (``zvg=True`` only) -- transitions
+  of the zero-held register sequence, its mantissa field, and the 1-bit
+  is-zero line toggles.
+* ``bic/<key>/data`` + ``bic/<key>/inv`` per BIC segment variant -- data
+  toggles of the encoded bus and the invert-line overhead toggles,
+  SEPARATELY (their sum is ``repro.core.bic.bic_transitions``).
+* ``bic_zvg/<key>/data`` + ``bic_zvg/<key>/inv`` (``zvg=True`` only) --
+  the same variants encoded over the zero-held stream (the ``bic+zvg``
+  stacked edge coding).
+* ``ones/00`` .. ``ones/15``      (``hist=True`` only) -- per-bit-position
+  ones counts: the value/zero histogram of the stream (bit-level Fig. 2
+  statistics; zero rows of the table plus ``zeros`` give the zero
+  histogram).
+
+Alongside the table every pass also returns ``rowzeros``: the per-cycle
+zero-word count ``int32[T]``, which :func:`repro.core.systolic.
+sa_design_report` turns into the both-edges-gated overlap correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.bic import seg_key
+
+#: bit width of the modelled bus words
+WORD_BITS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class CounterSpec:
+    """Static description of one fused counter pass (hashable, rides
+    through jit static arguments).
+
+    ``bic_variants`` is a tuple of segment-mask tuples -- one entry per
+    BIC menu variant, each a tuple of disjoint masks (e.g. mant+exp is
+    ``(0x007F, 0x7F80)``). ``zvg`` adds the zero-held / is-zero rows and
+    the BIC-over-held variants; ``hist`` adds the 16 ones-count rows.
+    """
+    bic_variants: tuple[tuple[int, ...], ...] = ()
+    zvg: bool = False
+    hist: bool = False
+
+    def __post_init__(self):
+        norm = tuple(tuple(int(s) & 0xFFFF for s in v)
+                     for v in self.bic_variants)
+        for v in norm:
+            if not v or any(s == 0 for s in v):
+                raise ValueError(f"empty segment mask in variant {v}")
+            union = 0
+            for s in v:
+                if union & s:
+                    raise ValueError(f"overlapping segment masks in {v}")
+                union |= s
+        if len(set(norm)) != len(norm):
+            raise ValueError(f"duplicate BIC variants {norm}")
+        object.__setattr__(self, "bic_variants", norm)
+        if len(self.unique_segments) > 31:
+            raise ValueError(
+                f"{len(self.unique_segments)} unique segments exceed the "
+                f"31 bit lanes of the kernel's packed invert state")
+
+    @property
+    def rows(self) -> tuple[str, ...]:
+        """Row names of the counter table, in storage order."""
+        names = ["raw", "mant_raw", "zeros"]
+        if self.zvg:
+            names += ["zvg", "mant_zvg", "iszero"]
+        for v in self.bic_variants:
+            k = seg_key(v)
+            names += [f"bic/{k}/data", f"bic/{k}/inv"]
+        if self.zvg:
+            for v in self.bic_variants:
+                k = seg_key(v)
+                names += [f"bic_zvg/{k}/data", f"bic_zvg/{k}/inv"]
+        if self.hist:
+            names += [f"ones/{b:02d}" for b in range(WORD_BITS)]
+        return tuple(names)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.rows)
+
+    @property
+    def unique_segments(self) -> tuple[int, ...]:
+        """Distinct segment masks across all variants, in first-appearance
+        order. Each segment's invert recurrence depends only on the raw
+        stream and its own mask, so variants SHARE segment recurrences --
+        and the kernel packs ALL of them into bit lanes of one int32
+        scan (the standard mantissa / mant+exp / full / exponent menu
+        has 3 unique segments riding one scan, not 5 separate ones)."""
+        return tuple(dict.fromkeys(s for v in self.bic_variants for s in v))
+
+    @property
+    def n_bic_states(self) -> int:
+        """Carried packed invert-line words: one per encoded stream
+        (raw always; held too when ``zvg``), zero without variants."""
+        if not self.unique_segments:
+            return 0
+        return 2 if self.zvg else 1

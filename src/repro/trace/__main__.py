@@ -51,6 +51,11 @@ def main() -> None:
                     help="per-site greedy design selection over the "
                          "--designs list (defaults to the full named "
                          "menu when --designs is not given)")
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "ref"],
+                    help="stream-counter implementation: the fused "
+                         "Pallas kernel, the pure-JAX reference, or "
+                         "auto (fused on TPU). Bit-identical results")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=16)
     ap.add_argument("--res", type=int, default=112,
@@ -105,13 +110,15 @@ def main() -> None:
         cells = sw.run_sweep(archs=archs, nets=nets,
                              geometries=tuple(sorted(sw.GEOMETRIES)),
                              segments=segments, mode=args.mode,
-                             batch=args.batch, seq=args.seq, res=args.res)
+                             batch=args.batch, seq=args.seq, res=args.res,
+                             backend=args.backend)
         print(sw.format_sweep(cells))
         reports = [(c.model, c.geometry, c.segments, c.report)
                    for c in cells]
     else:
         ccfg = sw.make_capture_config(args.geometry, segments[0],
-                                      designs=designs)
+                                      designs=designs,
+                                      backend=args.backend)
         # export tag: name what was actually priced (a design list, not
         # the unused --segments default)
         seg_tag = f"{len(designs)}designs" if designs else segments[0]

@@ -34,17 +34,22 @@ def make_capture_config(geometry: str = "paper16",
                         segments: str = "mantissa",
                         max_batch: int = 4,
                         max_calls_per_site: int = 4,
-                        designs: tuple[str, ...] = ()) -> CaptureConfig:
+                        designs: tuple[str, ...] = (),
+                        backend: str | None = None) -> CaptureConfig:
     """CaptureConfig from sweep-axis names.
 
     ``designs`` (names from :func:`repro.design.named_designs`) switches
     the capture to an explicit N-design list sharing ``geometry``;
     without it the paper pair implied by ``segments`` is priced.
+    ``backend`` picks the counter implementation (fused Pallas kernel vs
+    pure-JAX reference; bit-identical -- see
+    :mod:`repro.kernels.power_counters`).
     """
     geom = GEOMETRIES[geometry]
     mcfg = monitor.MonitorConfig(
         geometry=geom, bic_segments=SEGMENTS[segments],
-        designs=resolve_designs(designs, geom) if designs else ())
+        designs=resolve_designs(designs, geom) if designs else (),
+        backend=backend)
     return CaptureConfig(monitor=mcfg, max_batch=max_batch,
                          max_calls_per_site=max_calls_per_site)
 
@@ -163,7 +168,8 @@ def run_sweep(archs: tuple[str, ...] = ("qwen1.5-0.5b",),
               geometries: tuple[str, ...] = ("paper16", "mxu128"),
               segments: tuple[str, ...] = ("mantissa",),
               mode: str = "forward", batch: int = 2, seq: int = 16,
-              res: int = 112, seed: int = 0) -> list[SweepCell]:
+              res: int = 112, seed: int = 0,
+              backend: str | None = None) -> list[SweepCell]:
     """Trace every (model x geometry x BIC-segments) cell.
 
     Each cell re-interprets the model from scratch: caching the discovered
@@ -174,7 +180,7 @@ def run_sweep(archs: tuple[str, ...] = ("qwen1.5-0.5b",),
     cells = []
     for geom in geometries:
         for seg in segments:
-            ccfg = make_capture_config(geom, seg)
+            ccfg = make_capture_config(geom, seg, backend=backend)
             for arch in archs:
                 rep = trace_arch(arch, mode, batch=batch, seq=seq,
                                  cfg=ccfg, seed=seed)

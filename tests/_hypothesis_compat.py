@@ -1,46 +1,150 @@
-"""Install-or-skip shim for hypothesis.
+"""Install-or-run shim for hypothesis.
 
-Property-based tests use hypothesis when it is installed (see
-requirements-dev.txt); on environments without it, importing this module
-still succeeds and ``@given(...)``-decorated tests are collected as
-SKIPPED instead of the whole module failing at import time. Plain tests in
-the same modules keep running either way.
+Property-based tests use the real hypothesis when it is installed (see
+requirements-dev.txt; CI installs it). On environments without it this
+module provides a SMALL DETERMINISTIC FALLBACK instead of skipping: the
+strategy subset the suite actually uses (integers / lists / sampled_from
+/ permutations / booleans / tuples / just) draws seeded pseudo-random
+examples, and ``@given`` runs the test body once per drawn example --
+fewer examples and no shrinking, but the properties are genuinely
+exercised rather than silently skipped.
+
+Tests whose strategies the fallback cannot draw are skipped at call time
+with an explicit reason naming the unsupported strategy, so a skip is
+always attributable (``pytest -rs`` shows exactly which strategy is
+missing, instead of a blanket "hypothesis not installed").
+
+The fallback is deterministic per test (the RNG is seeded from the test
+name), so failures reproduce.
 """
 from __future__ import annotations
 
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
-except ImportError:                                   # pragma: no cover
+except ImportError:
+    import random
+
     import pytest
 
     HAVE_HYPOTHESIS = False
 
-    class _StrategyStub:
-        """Accepts any strategy-construction call; never executed."""
+    #: examples per property in fallback mode (deliberately below typical
+    #: hypothesis max_examples: no shrinking means failures are cheap to
+    #: rerun, and jit-heavy properties recompile per drawn shape)
+    FALLBACK_MAX_EXAMPLES = 8
+
+    class _Strategy:
+        """A drawable strategy: ``example(rng)`` returns one value."""
+
+        def __init__(self, draw, desc: str):
+            self._draw = draw
+            self.desc = desc
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return f"st.{self.desc}"
+
+    class _UnsupportedStrategy(_Strategy):
+        """Placeholder for strategies the fallback cannot draw; raises a
+        skip with an explicit reason when a test tries to use it."""
+
+        def __init__(self, desc: str):
+            super().__init__(None, desc)
+
+        def example(self, rng):
+            pytest.skip(
+                f"hypothesis not installed and the fallback shim cannot "
+                f"draw {self!r} (pip install -r requirements-dev.txt)")
+
+    class _Strategies:
+        """Fallback ``hypothesis.strategies`` namespace."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda r: r.randint(min_value, max_value),
+                             f"integers({min_value}, {max_value})")
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)), "booleans()")
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements),
+                             f"sampled_from(<{len(elements)}>)")
+
+        @staticmethod
+        def permutations(values):
+            values = list(values)
+
+            def draw(r):
+                out = list(values)
+                r.shuffle(out)
+                return out
+            return _Strategy(draw, f"permutations(<{len(values)}>)")
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(r):
+                n = r.randint(min_size, max_size)
+                return [elements.example(r) for _ in range(n)]
+            return _Strategy(draw,
+                             f"lists({elements!r}, {min_size}, {max_size})")
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda r: tuple(s.example(r) for s in strategies),
+                f"tuples(<{len(strategies)}>)")
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda r: value, f"just({value!r})")
 
         def __getattr__(self, name):
             def make(*args, **kwargs):
-                return None
+                return _UnsupportedStrategy(f"{name}(...)")
             return make
 
-    st = _StrategyStub()
+    st = _Strategies()
 
-    def given(*_args, **_kwargs):
+    def given(*arg_strategies, **kw_strategies):
         def deco(fn):
-            # replace with a zero-arg stub so pytest does not try to
-            # resolve the property arguments as fixtures
-            @pytest.mark.skip(
-                reason="hypothesis not installed "
-                       "(pip install -r requirements-dev.txt)")
-            def _skipped():
-                pass
-            _skipped.__name__ = fn.__name__
-            _skipped.__doc__ = fn.__doc__
-            return _skipped
+            inner_settings = getattr(fn, "_shim_settings", {})
+
+            def runner(*args, **kwargs):
+                merged = dict(inner_settings)
+                merged.update(getattr(runner, "_shim_settings", {}))
+                n = min(int(merged.get("max_examples",
+                                       FALLBACK_MAX_EXAMPLES)),
+                        FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(f"shim:{fn.__module__}.{fn.__name__}")
+                for i in range(max(n, 1)):
+                    drawn = [s.example(rng) for s in arg_strategies]
+                    drawn_kw = {k: s.example(rng)
+                                for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *drawn, **kwargs, **drawn_kw)
+                    except Exception:
+                        print(f"\nfalsifying example ({i + 1}/{n}): "
+                              f"{drawn!r} {drawn_kw!r}")
+                        raise
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.hypothesis_shim_examples = True
+            return runner
         return deco
 
-    def settings(*_args, **_kwargs):
+    def settings(*_args, **kwargs):
         def deco(fn):
+            merged = dict(getattr(fn, "_shim_settings", {}))
+            merged.update(kwargs)
+            fn._shim_settings = merged
             return fn
         return deco

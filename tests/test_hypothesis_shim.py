@@ -1,0 +1,127 @@
+"""Audit of the hypothesis install-or-run shim.
+
+The tier-1 suite used to carry 8 skipped ``@given`` tests whenever
+hypothesis was absent. The shim now RUNS those properties from seeded
+fallback draws, so this module pins the contract that made un-skipping
+them sound:
+
+* every strategy kind the suite uses draws values inside its constraints;
+* draws are deterministic per test name (failures reproduce);
+* ``@given`` really executes the body once per drawn example, respecting
+  ``settings(max_examples=...)`` up to the fallback cap, in either
+  decorator order;
+* strategies OUTSIDE the supported subset skip with an explicit reason
+  naming the strategy -- a skip is always attributable, never silent.
+
+With the real hypothesis installed the shim is inert; the fallback-only
+assertions are skipped with their own explicit reason.
+"""
+import random
+
+import pytest
+
+import _hypothesis_compat as H
+from _hypothesis_compat import given, settings, st
+
+fallback_only = pytest.mark.skipif(
+    H.HAVE_HYPOTHESIS,
+    reason="real hypothesis installed; the fallback shim is inert")
+
+
+# ---------------------------------------------------------- either mode
+@given(st.integers(3, 17), st.sampled_from(["a", "b", "c"]))
+@settings(max_examples=8, deadline=None)
+def test_given_runs_with_constrained_draws(n, tag):
+    """Smoke property (runs under real hypothesis AND the shim): drawn
+    values respect the strategy constraints."""
+    assert 3 <= n <= 17
+    assert tag in ("a", "b", "c")
+
+
+@given(perm=st.permutations([1, 2, 3, 4]),
+       words=st.lists(st.integers(0, 0xFFFF), min_size=1, max_size=8))
+@settings(max_examples=8, deadline=None)
+def test_given_kwargs_and_compound_strategies(perm, words):
+    assert sorted(perm) == [1, 2, 3, 4]
+    assert 1 <= len(words) <= 8
+    assert all(0 <= w <= 0xFFFF for w in words)
+
+
+# ------------------------------------------------------- fallback only
+@fallback_only
+def test_fallback_counts_executions_and_respects_max_examples():
+    calls = []
+
+    @settings(max_examples=3, deadline=None)
+    @given(st.integers(0, 9))
+    def prop(x):
+        calls.append(x)
+
+    prop()
+    assert len(calls) == 3
+
+    calls.clear()
+
+    # the other decorator order must behave identically
+    @given(st.integers(0, 9))
+    @settings(max_examples=3, deadline=None)
+    def prop2(x):
+        calls.append(x)
+
+    prop2()
+    assert len(calls) == 3
+
+
+@fallback_only
+def test_fallback_caps_examples():
+    calls = []
+
+    @settings(max_examples=10_000, deadline=None)
+    @given(st.booleans())
+    def prop(b):
+        calls.append(b)
+
+    prop()
+    assert len(calls) == H.FALLBACK_MAX_EXAMPLES
+
+
+@fallback_only
+def test_fallback_draws_are_deterministic():
+    seen = []
+
+    @given(st.lists(st.integers(0, 100), min_size=1, max_size=5))
+    def prop(xs):
+        seen.append(tuple(xs))
+
+    prop()
+    first = list(seen)
+    seen.clear()
+    prop()
+    assert seen == first
+
+
+@fallback_only
+def test_unsupported_strategy_skips_with_explicit_reason():
+    @given(st.text())      # not in the supported subset
+    def prop(s):
+        raise AssertionError("body must not run")
+
+    with pytest.raises(pytest.skip.Exception) as exc:
+        prop()
+    msg = str(exc.value)
+    assert "hypothesis not installed" in msg
+    assert "text" in msg   # the reason names the missing strategy
+
+
+@fallback_only
+def test_strategy_examples_respect_bounds_directly():
+    rng = random.Random(0)
+    ints = st.integers(-5, 5)
+    assert all(-5 <= ints.example(rng) <= 5 for _ in range(50))
+    lst = st.lists(st.integers(0, 1), min_size=2, max_size=4)
+    for _ in range(20):
+        xs = lst.example(rng)
+        assert 2 <= len(xs) <= 4 and set(xs) <= {0, 1}
+    assert st.just("v").example(rng) == "v"
+    t = st.tuples(st.integers(1, 1), st.booleans()).example(rng)
+    assert t[0] == 1 and isinstance(t[1], bool)
