@@ -4,8 +4,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test kernel-test trace-smoke serve-smoke design-smoke \
-	bench-quick ci
+.PHONY: test kernel-test multidevice-test trace-smoke serve-smoke \
+	design-smoke bench-quick ci
 
 # tier-1: the whole test suite, fail fast, with the 15 slowest tests
 # reported so suite-runtime regressions are visible in every CI log
@@ -18,6 +18,15 @@ kernel-test:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q --durations=15 \
 	    tests/test_kernels.py tests/test_power_counter_kernels.py \
 	    tests/test_hypothesis_shim.py
+
+# tier-2 multi-device suite: mesh-sharded serving bit-exactness +
+# sharding-rule resolution, on 8 virtual CPU devices (the XLA flag must
+# be set before jax initializes, hence a dedicated pytest invocation
+# rather than a tier-1 marker)
+multidevice-test:
+	JAX_PLATFORMS=cpu \
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PY) -m pytest -x -q --durations=15 tests/multidevice
 
 # end-to-end smoke of the model-wide power tracer on the smallest config
 trace-smoke:

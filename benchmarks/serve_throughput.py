@@ -7,9 +7,18 @@ decode batch? Each cell serves the SAME mixed-prompt-length workload
 per decode step, tokens/s, mean slot occupancy, and -- for the power cell
 -- the serve-wide energy-weighted savings from per-request accounting.
 
+``--mesh DATAxMODEL`` adds a sharded-engine axis: the same workload at
+the widest batch through a ``ServeEngine`` sharded over a host mesh of
+that shape, reporting its decode wall-clock and verifying the sharding
+contract inline (greedy tokens must be bit-identical to the unsharded
+cell -- a changed token is a sharding bug, not noise). Pair it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to try mesh
+shapes on a laptop; CI runs exactly that as the multidevice smoke.
+
 Decode-step wall time excludes compile (one warm-up workload runs first).
 
 Run:  PYTHONPATH=src python -m benchmarks.serve_throughput [--quick]
+      [--mesh 2x4]
 """
 from __future__ import annotations
 
@@ -37,9 +46,10 @@ def _workload(cfg, seed: int = 0):
             for _ in range(N_REQUESTS)]
 
 
-def _serve(params, cfg, prompts, slots: int, power: bool):
+def _serve(params, cfg, prompts, slots: int, power: bool, mesh=None):
     engine = ServeEngine(params, cfg, ServeConfig(
-        max_slots=slots, cache_len=CACHE_LEN, power_monitor=power))
+        max_slots=slots, cache_len=CACHE_LEN, power_monitor=power),
+        mesh=mesh)
     for p in prompts:
         engine.submit(p, max_new_tokens=MAX_NEW)
     t0 = time.perf_counter()
@@ -48,7 +58,13 @@ def _serve(params, cfg, prompts, slots: int, power: bool):
     return engine, finished, dt
 
 
-def main(quick: bool = False) -> None:
+def _parse_mesh(spec: str):
+    from repro.launch.mesh import make_host_mesh
+    data, model = (int(v) for v in spec.lower().split("x"))
+    return make_host_mesh(data=data, model=model)
+
+
+def main(quick: bool = False, mesh_spec: str | None = None) -> None:
     cfg = SMOKES[ARCH].with_(compute_dtype="float32")
     params = lm.init_model(jax.random.key(0), cfg)
     prompts = _workload(cfg)
@@ -84,11 +100,35 @@ def main(quick: bool = False) -> None:
     print("# same greedy tokens at every batch width; power accounting "
           "costs one extra monitored matmul pair per decode step")
 
+    if mesh_spec:
+        mesh = _parse_mesh(mesh_spec)
+        shape = dict(mesh.shape)
+        _serve(params, cfg, prompts, slots, power=False,
+               mesh=mesh)                         # sharded compile warm-up
+        engine, finished, dt = _serve(params, cfg, prompts, slots,
+                                      power=True, mesh=mesh)
+        toks = {r.uid: r.generated for r in finished}
+        agg = engine.trace_report().summary()
+        row(f"serve_b{slots}_mesh{shape['data']}x{shape['model']}",
+            dt / max(engine.stats["decode_steps"], 1) * 1e6,
+            f"{engine.stats['tokens'] / dt:.0f} tok/s sharded / "
+            f"{agg['total_saving'] * 100:.2f}% total saving "
+            f"(same tokens: {toks == tokens_ref})")
+        if toks != tokens_ref:
+            # this cell doubles as the CI sharding smoke: a changed
+            # greedy token is a sharding bug, not noise -- fail the run
+            raise SystemExit(
+                "sharded greedy outputs differ from the single-device "
+                "engine (mesh bit-exactness violated)")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="two batch widths only (CI smoke)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="add a sharded-engine cell over a host mesh of "
+                         "this shape (e.g. 2x4)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    main(quick=args.quick)
+    main(quick=args.quick, mesh_spec=args.mesh)

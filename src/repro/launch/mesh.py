@@ -14,6 +14,7 @@ stays inside the pod's ICI domain.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 try:  # jax >= 0.5: explicit axis types (Auto matches the old behaviour)
     from jax.sharding import AxisType
@@ -31,10 +32,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
-def make_host_mesh(model: int | None = None):
-    """A small mesh over whatever devices exist (tests / examples)."""
-    n = len(jax.devices())
-    model = model or 1
-    data = n // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         **_axis_kwargs(2))
+def make_host_mesh(model: int | None = None, data: int | None = None):
+    """A small ("data", "model") mesh over the host's devices
+    (tests / examples / single-host serving).
+
+    * ``model`` only: the requested TP width is HONORED (it decides
+      memory and layout, so silently shrinking it would lie to the
+      caller) and data is whatever is left (``n // model``) -- on an
+      8-device host ``model=3`` gives a 2x3 mesh over 6 devices, idling
+      two. Only an unsatisfiable request (``model > n``) falls back, to
+      ``model = n``.
+    * ``data`` and ``model``: exactly that shape, over the first
+      ``data * model`` devices -- a 2x2 mesh on an 8-device host is
+      legitimate (the suite in ``tests/multidevice`` relies on it).
+    """
+    devs = jax.devices()
+    n = len(devs)
+    model = max(model or 1, 1)
+    if data is None:
+        model = min(model, n)
+        data = n // model
+    if data < 1 or data * model > n:
+        raise ValueError(
+            f"mesh {data}x{model} needs {data * model} devices; "
+            f"host has {n}")
+    arr = np.asarray(devs[:data * model]).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"), **_axis_kwargs(2))

@@ -387,6 +387,23 @@ def make_slot_prefill_step(cfg: ArchConfig, cache_len: int,
     return slot_prefill_step
 
 
+def make_embed_step(cfg: ArchConfig):
+    """(params, inputs) -> embedded activations ``x [B, S, D]``.
+
+    The serving engine's power-accounting path: the per-step operand the
+    monitor streams is the embedded input, and jitting the lookup (rather
+    than dispatching ``embed_inputs`` eagerly every sampled step) both
+    cuts per-step overhead and gives the mesh engine a single place to
+    pin replicated out_shardings -- the gathered activations feed the
+    accountant bit-identically to the single-device engine.
+    """
+    def embed_step(params, inputs):
+        x, _ = embed_inputs(params, cfg, inputs)
+        return x
+
+    return embed_step
+
+
 def make_decode_step(cfg: ArchConfig, constrain: Constrain = _id):
     """(params, states, inputs{token/codes/embeds, positions}) ->
     (logits, states)."""

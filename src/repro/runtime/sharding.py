@@ -135,6 +135,54 @@ def tree_shardings(mesh: Mesh, tree) -> Any:
     return jax.tree.map(one, tree)
 
 
+def cache_shardings(mesh: Mesh, states) -> Any:
+    """Shardings for a serving slot cache (``lm.make_decode_state``).
+
+    Unlike :func:`tree_shardings`, this knows the decode-state layout
+    contract: ``head`` / ``tail`` leaves are ``[B, ...]`` while scanned
+    ``groups`` leaves are ``[G, B, ...]`` (the scan axis is never
+    sharded), so the TRUE batch dim -- the slot axis -- shards over the
+    data axes. One trailing feature dim (kv heads / head dim / lora rank)
+    shards over "model", matching the TP layout the serve rules give the
+    attention weights; the dim right after the slot axis is the cache
+    sequence/window dim and is never given to "model" (sharding it would
+    force an all-gather inside every decode step). Every assignment is
+    divisibility-guarded: awkward slot counts or head counts fall back to
+    replication, never to a compile error.
+    """
+    sizes = _mesh_axes(mesh)
+    dpx = dp_axes(mesh)
+    dp_size = math.prod(sizes[a] for a in dpx) if dpx else 1
+    dp = dpx if len(dpx) > 1 else (dpx[0] if dpx else None)
+    model = sizes.get("model", 1)
+
+    def leaf(batch_axis):
+        def one(a):
+            if not hasattr(a, "shape") or a.ndim <= batch_axis:
+                return NamedSharding(mesh, P())
+            spec: list = [None] * a.ndim
+            if dpx and a.shape[batch_axis] % dp_size == 0:
+                spec[batch_axis] = dp
+            if model > 1:
+                # trailing feature dims only; when the leaf has a
+                # sequence dim (ndim - batch_axis >= 3) it sits at
+                # batch_axis + 1 and is excluded from candidates
+                lo = (batch_axis + 2 if a.ndim - batch_axis >= 3
+                      else batch_axis + 1)
+                for i in range(a.ndim - 1, lo - 1, -1):
+                    if a.shape[i] % model == 0 and a.shape[i] >= model:
+                        spec[i] = "model"
+                        break
+            return NamedSharding(mesh, P(*spec))
+        return one
+
+    return {
+        "head": jax.tree.map(leaf(0), states["head"]),
+        "groups": jax.tree.map(leaf(1), states["groups"]),
+        "tail": jax.tree.map(leaf(0), states["tail"]),
+    }
+
+
 def batch_shardings(mesh: Mesh, batch) -> Any:
     """Input batches: shard the batch dim over the data axes; leading-
     component leaves (M-RoPE positions [3, B, S]) shard dim 1."""

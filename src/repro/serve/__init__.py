@@ -16,6 +16,11 @@ semantics.
     engine.submit([1, 2, 3], max_new_tokens=32)
     finished = engine.run()
     print(finished[0].power.summary())
+
+Pass ``mesh=launch.mesh.make_host_mesh(model=...)`` to ``ServeEngine``
+to serve SPMD over a device mesh (TP-only weight sharding, sharded slot
+cache, in-place donated decode) with bit-identical tokens and power
+reports -- see docs/serving.md#mesh-serving and ``tests/multidevice``.
 """
 from .cache import SlotCache                                  # noqa: F401
 from .engine import ServeConfig, ServeEngine                  # noqa: F401

@@ -12,6 +12,13 @@ the full-row overwrite at the next admission).
 Leaf layout note: scanned group states are stacked ``[G, B, ...]`` while
 head/tail block states are ``[B, ...]``, so the scatter runs per top-level
 key with the right batch axis (1 vs 0) rather than one uniform tree_map.
+
+Mesh mode: constructed with a ``Mesh``, the shared states live as
+``runtime.sharding.cache_shardings`` NamedShardings (slot axis over the
+data axes, one trailing feature dim over "model") and the scatter is
+re-jitted per instance with those explicit out_shardings. The scatter
+ALWAYS donates the shared states -- admission rewrites one row in place
+instead of double-buffering the whole cache.
 """
 from __future__ import annotations
 
@@ -23,8 +30,7 @@ from repro.models import lm
 from repro.models.config import ArchConfig
 
 
-@jax.jit
-def _scatter_slot(states, upd, slot):
+def _scatter_body(states, upd, slot):
     """Write batch-1 prefill states ``upd`` into row ``slot`` of the shared
     states (dynamic slot index: one compile serves every slot)."""
     def at_axis(axis):
@@ -39,6 +45,11 @@ def _scatter_slot(states, upd, slot):
     }
 
 
+#: single-device scatter, shared across engine instances (one compile);
+#: arg 0 (the shared states) is donated -- the update happens in place
+_scatter_slot = jax.jit(_scatter_body, donate_argnums=(0,))
+
+
 class SlotCache:
     """Fixed-capacity slot allocator over one shared decode-state tree.
 
@@ -49,7 +60,7 @@ class SlotCache:
     """
 
     def __init__(self, cfg: ArchConfig, max_slots: int, cache_len: int,
-                 dtype=None):
+                 dtype=None, mesh=None):
         if max_slots < 1:
             raise ValueError(f"max_slots must be >= 1: {max_slots}")
         self.cfg = cfg
@@ -57,6 +68,17 @@ class SlotCache:
         self.cache_len = cache_len
         kw = {} if dtype is None else {"dtype": dtype}
         self.states = lm.make_decode_state(cfg, max_slots, cache_len, **kw)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.runtime import sharding as rsh
+            self.shardings = rsh.cache_shardings(mesh, self.states)
+            self.states = jax.device_put(self.states, self.shardings)
+            self._scatter = jax.jit(_scatter_body,
+                                    out_shardings=self.shardings,
+                                    donate_argnums=(0,))
+        else:
+            self.shardings = None
+            self._scatter = _scatter_slot
         self._free: list[int] = list(range(max_slots - 1, -1, -1))
         self.live = np.zeros(max_slots, bool)
         self.positions = np.zeros(max_slots, np.int32)
@@ -102,7 +124,7 @@ class SlotCache:
         if prompt_len >= self.cache_len:
             raise RuntimeError(
                 f"prompt_len {prompt_len} >= cache_len {self.cache_len}")
-        self.states = _scatter_slot(self.states, states1,
+        self.states = self._scatter(self.states, states1,
                                     np.int32(slot))
         self.positions[slot] = prompt_len
         self.tokens[slot] = first_token

@@ -19,6 +19,19 @@ batched op in the decode path is row-independent), so a request's tokens
 are bit-identical whether it runs alone or co-batched -- the invariant
 ``tests/test_serve_engine.py`` pins down.
 
+Mesh mode: pass a ``Mesh`` (``launch.mesh.make_host_mesh`` /
+``make_production_mesh``) and the engine goes SPMD: params are sharded
+with the TP-only serving rules (``runtime.sharding.LOGICAL_RULES_SERVE``
+-- no FSDP gather on the decode path), the slot cache lives as
+``cache_shardings`` NamedShardings (slot axis over the data axes, one
+trailing feature dim over "model"), and prefill / decode are jitted with
+explicit in_shardings / out_shardings; the decode cache is donated, so
+steady-state decode updates the sharded cache in place. Host-side
+control flow (scheduler, slots, sampling inputs) is unchanged, which is
+what makes the sharded engine's token stream comparable 1:1 with the
+single-device engine -- ``tests/multidevice`` asserts tokens AND power
+counters are bit-identical.
+
 Power accounting (optional): each admitted request carries a
 :class:`repro.serve.power.PowerAccountant` slot that accumulates BIC + ZVG
 streaming counters over the request's OWN operand streams -- its real
@@ -69,20 +82,61 @@ class ServeConfig:
 class ServeEngine:
     """Continuous-batching serving over one model + one slot cache."""
 
-    def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig):
+    def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig,
+                 mesh=None):
         if cfg.inputs != "tokens":
             raise ValueError(
                 f"ServeEngine serves token LMs; {cfg.name} has "
                 f"inputs={cfg.inputs!r}")
-        self.params = params
         self.cfg = cfg
         self.scfg = scfg
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.runtime import sharding as rsh
+            self.param_shardings = rsh.param_shardings(mesh, params,
+                                                       serve=True)
+            params = jax.device_put(params, self.param_shardings)
+        else:
+            self.param_shardings = None
+        self.params = params
         self.cache = SlotCache(cfg, scfg.max_slots, scfg.cache_len,
-                               dtype=jnp.dtype(cfg.compute_dtype))
+                               dtype=jnp.dtype(cfg.compute_dtype),
+                               mesh=mesh)
         self.scheduler = FIFOScheduler(scfg.cache_len)
-        self._prefill = jax.jit(
-            lm.make_slot_prefill_step(cfg, scfg.cache_len))
-        self._decode = jax.jit(lm.make_decode_step(cfg))
+        prefill_fn = lm.make_slot_prefill_step(cfg, scfg.cache_len)
+        decode_fn = lm.make_decode_step(cfg)
+        embed_fn = lm.make_embed_step(cfg)
+        if mesh is None:
+            # decode donates the slot cache (arg 1): steady-state decode
+            # rewrites the KV rows in place instead of double-buffering
+            self._prefill = jax.jit(prefill_fn)
+            self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+            self._embed = jax.jit(embed_fn)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = NamedSharding(mesh, P())
+            rep_like = lambda tree: jax.tree.map(lambda _: rep, tree)
+            cache_sh = self.cache.shardings
+            # prefill is batch-1 (nothing to shard but the weights): its
+            # fresh states come back replicated and the scatter reshards
+            # them into the slot row's layout
+            self._prefill = jax.jit(
+                prefill_fn,
+                in_shardings=(self.param_shardings, rep, rep),
+                out_shardings=(rep, rep_like(cache_sh)))
+            inputs_sh = rsh.batch_shardings(
+                mesh, self.cache.decode_inputs())
+            self._decode = jax.jit(
+                decode_fn,
+                in_shardings=(self.param_shardings, cache_sh, inputs_sh),
+                out_shardings=(rep, cache_sh),
+                donate_argnums=(1,))
+            # replicated out_shardings: the accountant's operand slices
+            # are gathered before any counter math, so power numbers are
+            # bit-identical to the single-device engine
+            self._embed = jax.jit(embed_fn,
+                                  in_shardings=(self.param_shardings, rep),
+                                  out_shardings=rep)
         self._running: dict[int, Request] = {}
         self._temp = np.zeros(scfg.max_slots, np.float32)
         self._topk = np.zeros(scfg.max_slots, np.int32)
@@ -93,8 +147,15 @@ class ServeEngine:
         self.accountant = (PowerAccountant(scfg.monitor,
                                            scfg.power_sample_every)
                            if scfg.power_monitor else None)
-        self._power_weights = (lm.pick_monitor_weights(params)
-                               if scfg.power_monitor else [])
+        weights = (lm.pick_monitor_weights(params)
+                   if scfg.power_monitor else [])
+        if mesh is not None:
+            # gather the monitored weights off the mesh once: counter
+            # streaming then runs on the default device with operands
+            # bit-identical to the unsharded engine's
+            weights = [(site, jnp.asarray(jax.device_get(w)))
+                       for site, w in weights]
+        self._power_weights = weights
         self.stats = {"steps": 0, "decode_steps": 0, "tokens": 0,
                       "occupancy_sum": 0, "peak_live": 0}
 
@@ -127,7 +188,7 @@ class ServeEngine:
         if live:
             inputs = self.cache.decode_inputs()
             if self.accountant is not None and self.accountant.tick(live):
-                x, _ = lm.embed_inputs(self.params, self.cfg, inputs)
+                x = self._embed(self.params, inputs)
                 for site, w in self._power_weights:
                     self.accountant.record_decode(live, x[:, 0], w, site)
                 self.accountant.mark_sampled(live)
@@ -202,9 +263,12 @@ class ServeEngine:
         self._running[slot] = req
         if self.accountant is not None:
             self.accountant.begin(slot, req.uid, length)
-            prompt = jnp.asarray(np.asarray(req.prompt, np.int32)[None])
-            x, _ = lm.embed_inputs(self.params, self.cfg,
-                                   {"tokens": prompt})
+            # embed the SAME bucketed token array prefill just consumed
+            # (one compile per bucket, not per distinct prompt length);
+            # the slice back to the real rows is exact -- embedding is
+            # per-token, so padding never leaks into the first `length`
+            x = self._embed(self.params,
+                            {"tokens": jnp.asarray(toks)})[:, :length]
             for site, w in self._power_weights:
                 self.accountant.record_prefill(slot, x, w, site)
 
@@ -228,7 +292,10 @@ class ServeEngine:
     # -------------------------------------------------------------- views
     def trace_report(self):
         """Serve-wide paper-style TraceReport over all monitored traffic
-        (requires power_monitor=True)."""
+        (requires power_monitor=True). In mesh mode this already
+        aggregates across the mesh: counters are booked from gathered
+        operand slices scaled to the full operand extent, so the
+        serve-wide numbers equal the single-device engine's exactly."""
         if self.accountant is None:
             raise RuntimeError("power_monitor is off")
         from repro.trace.report import build_report

@@ -34,9 +34,26 @@ import dataclasses
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import monitor
 from repro.trace.capture import CaptureConfig, TraceCapture
+
+
+def gather_local(a):
+    """Bring a (possibly mesh-sharded) operand onto the default device.
+
+    The accountant's contract is that its numbers are sums of
+    ``monitor.stream_counters`` outputs -- the SAME outputs whether the
+    engine runs on one device or a mesh. Counter math over locally
+    re-assembled operands guarantees that: the gather is exact (no
+    arithmetic), and the jitted counter kernels then see bit-identical
+    inputs on the same (single-device) partitioning either way. No-op
+    for anything already on one device.
+    """
+    if isinstance(a, jax.Array) and len(a.sharding.device_set) > 1:
+        return jnp.asarray(jax.device_get(a))
+    return a
 
 
 @partial(jax.jit, static_argnames=("mcfg",))
@@ -202,6 +219,7 @@ class PowerAccountant:
                        site: str) -> None:
         """One prefill matmul for the slot's request: ``acts [..., K]`` (the
         request's real prompt rows only -- no padding), ``weight [K, N]``."""
+        acts, weight = gather_local(acts), gather_local(weight)
         A = acts.reshape(-1, acts.shape[-1])
         m = A.shape[0]
         # pre-sample rows to a power-of-two budget so the jitted stream
@@ -250,7 +268,8 @@ class PowerAccountant:
         """One decode-step matmul across the whole batch: ``acts [B, K]``
         (row per KV slot), ``weight [K, N]``. Only rows in ``slots`` are
         credited; the step must have been announced with :meth:`tick`."""
-        per_row = jax.device_get(_rows_counters(acts, weight, self.mcfg))
+        per_row = jax.device_get(_rows_counters(
+            gather_local(acts), gather_local(weight), self.mcfg))
         for s in slots:
             acc = self._slots[s]
             if not acc.due:

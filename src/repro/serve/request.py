@@ -44,7 +44,8 @@ class Request:
     slot: int = -1                 # KV-cache slot once admitted (kept after
                                    # retirement for occupancy analysis)
     generated: list[int] = dataclasses.field(default_factory=list)
-    finish_reason: str = ""        # "eos" | "length" | "cache"
+    finish_reason: str = ""        # "eos" | "length" | "cache" |
+                                   # "cancelled" (dropped while queued)
     submit_step: int = -1          # engine step counters (set by the
     start_step: int = -1           # engine): queueing delay is
     finish_step: int = -1          # start_step - submit_step

@@ -51,6 +51,18 @@ class FIFOScheduler:
     def n_pending(self) -> int:
         return len(self.pending)
 
+    def cancel(self, uid: int) -> bool:
+        """Drop a still-queued request (False when unknown / already
+        admitted -- running requests are not preemptible, by the same
+        no-eviction contract admission gives them)."""
+        for req in self.pending:
+            if req.uid == uid:
+                self.pending.remove(req)
+                req.status = RequestStatus.FINISHED
+                req.finish_reason = "cancelled"
+                return True
+        return False
+
     def pop_admissible(self, n_free_slots: int) -> list[Request]:
         """Up to ``n_free_slots`` requests, strictly FIFO (no reordering:
         every queued request was validated to fit, so the head is never

@@ -1,0 +1,149 @@
+"""Property/fuzz tests: FIFOScheduler + SlotCache under random churn.
+
+The scheduler's promises, fuzzed over randomized submit / admit /
+decode / cancel / retire interleavings (via the hypothesis shim -- the
+properties run with or without hypothesis installed):
+
+  * strict FIFO: requests are admitted in submission order, no matter
+    how admission windows and cancellations interleave;
+  * admission never over-commits: every admitted request's worst-case
+    footprint (prompt + max_new_tokens) fits ``cache_len``, and
+    infeasible requests are rejected at submit (never queued);
+  * the "cache" retirement reason is unreachable when admission
+    validated the footprint -- simulated decode always retires by
+    "eos"/"length" first;
+  * freed slots are immediately reusable, always lowest-index-first,
+    and the pool never leaks (n_free + n_live == max_slots throughout).
+
+No model runs here: the scheduler and the slot allocator are host-side
+control flow, which is exactly why the sharded engine can reuse them
+unchanged (tests/multidevice pins that equivalence end to end).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.serve import FIFOScheduler, Request
+from repro.serve.cache import SlotCache
+
+
+# ------------------------------------------------------------ scheduler
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 40),     # prompt_len
+                          st.integers(1, 40)),    # max_new_tokens
+                min_size=1, max_size=24),
+       st.integers(0, 2 ** 16))
+def test_fifo_churn_preserves_order_and_never_overcommits(reqs, seed):
+    cache_len = 32
+    sched = FIFOScheduler(cache_len)
+    rng = np.random.default_rng(seed)
+    submitted = []
+    for plen, mnew in reqs:
+        req = Request(prompt=list(range(plen)), max_new_tokens=mnew)
+        if plen + mnew > cache_len:
+            with pytest.raises(ValueError, match="cache"):
+                sched.submit(req)
+            assert req.uid == -1              # rejected: never queued
+            continue
+        submitted.append(sched.submit(req).uid)
+    assert sched.n_pending == len(submitted)
+
+    admitted = []
+    while sched.n_pending:
+        # random admission window, like a fluctuating free-slot count
+        got = sched.pop_admissible(int(rng.integers(0, 4)))
+        admitted.extend(r.uid for r in got)
+        for r in got:                         # footprint was validated
+            assert r.prompt_len + r.max_new_tokens <= cache_len
+    assert admitted == submitted              # strict FIFO, no losses
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 20),     # prompt_len
+                          st.integers(1, 12),     # max_new_tokens
+                          st.integers(0, 30)),    # eos offset (may miss)
+                min_size=1, max_size=16))
+def test_cache_retirement_reason_is_unreachable(reqs):
+    """Simulate every admitted request's full decode: position starts at
+    prompt_len and advances once per generated token. Validated
+    admission means "eos"/"length" always fires before the position can
+    reach cache_len."""
+    cache_len = 32
+    eos_id = 7
+    sched = FIFOScheduler(cache_len)
+    for plen, mnew, eos_at in reqs:
+        req = sched.submit(Request(prompt=list(range(plen)),
+                                   max_new_tokens=mnew))
+        position = req.prompt_len
+        reason = ""
+        while not reason:
+            # the engine samples a token, writes it at `position`, then
+            # checks retirement; eos_at decides if/when EOS is drawn
+            tok = eos_id if len(req.generated) == eos_at else eos_id + 1
+            req.generated.append(tok)
+            position += 1
+            assert position <= cache_len, "over-committed cache"
+            reason = sched.retire_reason(req, position, eos_id)
+        assert reason in ("eos", "length"), reason
+        assert len(req.generated) <= req.max_new_tokens
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=12),
+       st.lists(st.integers(0, 11), max_size=6))
+def test_cancel_drops_only_queued_and_keeps_fifo(budgets, cancels):
+    sched = FIFOScheduler(64)
+    reqs = [sched.submit(Request(prompt=[1, 2], max_new_tokens=b))
+            for b in budgets]
+    cancelled = set()
+    for idx in cancels:
+        if idx < len(reqs) and reqs[idx].uid not in cancelled:
+            assert sched.cancel(reqs[idx].uid)
+            assert reqs[idx].finish_reason == "cancelled"
+            cancelled.add(reqs[idx].uid)
+        else:
+            assert not sched.cancel(10_000 + idx)   # unknown uid
+    survivors = [r.uid for r in reqs if r.uid not in cancelled]
+    out = [r.uid for r in sched.pop_admissible(len(reqs))]
+    assert out == survivors                   # FIFO among survivors
+    for uid in cancelled:
+        assert not sched.cancel(uid)          # already gone
+
+
+# ------------------------------------------------------------ slot pool
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=60),
+       st.integers(1, 5))
+def test_slot_pool_reuse_under_random_churn(ops, max_slots):
+    """Random allocate/release churn: the pool never leaks, always hands
+    out the lowest free slot, and freed slots are reusable immediately."""
+    from repro.configs import SMOKES
+    cfg = SMOKES["qwen1.5-0.5b"].with_(compute_dtype="float32")
+    cache = SlotCache(cfg, max_slots, cache_len=8)
+    live = []
+    rng = np.random.default_rng(len(ops))
+    for want_alloc in ops:
+        assert cache.n_free + cache.n_live == max_slots
+        if want_alloc:
+            if cache.n_free == 0:             # full pool refuses
+                with pytest.raises(RuntimeError):
+                    cache.allocate()
+                continue
+            free_before = {s for s in range(max_slots)
+                           if s not in live}
+            slot = cache.allocate()
+            assert slot == min(free_before)   # lowest-first, determinism
+            assert slot not in live
+            live.append(slot)
+        elif live:
+            slot = live.pop(int(rng.integers(0, len(live))))
+            cache.release(slot)
+            assert not cache.live[slot]
+            assert cache.positions[slot] == 0
+    assert cache.n_live == len(live)
+    assert sorted(cache.live_slots()) == sorted(live)
+    # double release always refuses
+    if live:
+        cache.release(live[0])
+        with pytest.raises(RuntimeError):
+            cache.release(live[0])
