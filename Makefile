@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test kernel-test multidevice-test trace-smoke serve-smoke \
-	design-smoke bench-quick ci
+	design-smoke paging-smoke bench-quick ci
 
 # tier-1: the whole test suite, fail fast, with the 15 slowest tests
 # reported so suite-runtime regressions are visible in every CI log
@@ -44,7 +44,13 @@ design-smoke:
 	$(PY) benchmarks/run.py --quick --only bic_variants
 	$(PY) -m repro.trace --archs '' --nets resnet50 --res 64 --select
 
+# end-to-end smoke of the block-paged serving engine: equal-HBM
+# concurrency, chunked prefill, prefix reuse and power overhead cells,
+# writing the structured-JSON CI artifact
+paging-smoke:
+	$(PY) -m benchmarks.serve_paging --quick --emit-json BENCH_serve.json
+
 bench-quick: trace-smoke
 	$(PY) -m benchmarks.serve_throughput --quick
 
-ci: test trace-smoke serve-smoke design-smoke
+ci: test trace-smoke serve-smoke design-smoke paging-smoke

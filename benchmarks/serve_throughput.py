@@ -100,6 +100,30 @@ def main(quick: bool = False, mesh_spec: str | None = None) -> None:
     print("# same greedy tokens at every batch width; power accounting "
           "costs one extra monitored matmul pair per decode step")
 
+    # paged cell (runs in --quick too: this doubles as the CI paging
+    # smoke): same workload through the block-paged engine with the HBM
+    # of `slots` slot reservations -- tokens must stay bit-identical
+    from repro.serve import PagingConfig
+    pages = slots * CACHE_LEN // 8 + 1
+    paged_scfg = ServeConfig(cache_len=CACHE_LEN, paging=PagingConfig(
+        page_size=8, num_pages=pages, max_rows=2 * slots))
+    eng = ServeEngine(params, cfg, paged_scfg)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=MAX_NEW)
+    t0 = time.perf_counter()
+    finished = eng.run()
+    dt = time.perf_counter() - t0
+    toks = {r.uid: r.generated for r in finished}
+    row(f"serve_paged_hbm{slots}",
+        dt / max(eng.stats["decode_steps"], 1) * 1e6,
+        f"{eng.stats['tokens'] / dt:.0f} tok/s / peak admitted "
+        f"{eng.stats['peak_admitted']} vs {slots} slots at equal HBM "
+        f"(same tokens: {toks == tokens_ref})")
+    if toks != tokens_ref:
+        raise SystemExit(
+            "paged greedy outputs differ from the slot engine "
+            "(paging bit-exactness violated)")
+
     if mesh_spec:
         mesh = _parse_mesh(mesh_spec)
         shape = dict(mesh.shape)

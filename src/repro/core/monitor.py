@@ -190,10 +190,6 @@ def monitor_streams(A: jax.Array, W: jax.Array,
 #: canonical per-design energy components in ``stream_counters`` keys
 #: (``repro.core.power.COMPONENTS`` + the total)
 COMPONENTS = power.COMPONENTS + ("total",)
-#: legacy twin-design component sets (pre-design-API flat keys)
-BASE_COMPONENTS = ("streaming", "clock", "control", "mult", "add", "acc",
-                   "unload", "total")
-PROP_COMPONENTS = BASE_COMPONENTS + ("overhead",)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -245,51 +241,39 @@ def sampled_fraction_scale(m: int, k: int, n: int,
 def counters_to_energy(counters: dict, scale: float = 1.0) -> dict:
     """Shape accumulated flat counters as ``{design: {component: fJ}}``
     so they aggregate with :func:`repro.core.power.aggregate_savings`
-    (the default design names ARE ``"baseline"``/``"proposed"``, which is
-    what keeps the old twin-dict call sites working unchanged).
+    (the default design names ARE ``"baseline"``/``"proposed"``).
 
-    Accepts both the design-namespaced keys of :func:`stream_counters`
-    and the pre-design-API ``eb_*``/``ep_*`` flat keys. For the legacy
-    keys it reproduces the pre-design-API contract exactly: the known
-    component sets (:data:`BASE_COMPONENTS` / :data:`PROP_COMPONENTS`)
-    are always COMPLETE in the output, with absent counters zero-filled
-    -- downstream aggregation (``power.aggregate_savings``, report
-    accessors) indexes components unconditionally, so a partial legacy
-    dict must yield zeros, not ``KeyError``.
+    Only the design-namespaced ``e/<design>/<component>`` keys of
+    :func:`stream_counters` are accepted; the pre-design-API flat
+    ``eb_*``/``ep_*`` keys were removed with the hardwired base/prop
+    dichotomy -- re-trace with the design API instead of loading counters
+    captured before it.
     """
     out: dict[str, dict[str, float]] = {}
-    legacy = False
     for key, v in counters.items():
         if key.startswith("e/"):
             _, name, comp = key.split("/", 2)
             out.setdefault(name, {})[comp] = float(v) * scale
-        elif key.startswith("eb_"):
-            legacy = True
-            out.setdefault("baseline", {})[key[3:]] = float(v) * scale
-        elif key.startswith("ep_"):
-            legacy = True
-            out.setdefault("proposed", {})[key[3:]] = float(v) * scale
-    if legacy:
-        for name, comps in (("baseline", BASE_COMPONENTS),
-                            ("proposed", PROP_COMPONENTS)):
-            known = out.setdefault(name, {})
-            for c in comps:
-                known.setdefault(c, 0.0)
+        elif key.startswith(("eb_", "ep_")):
+            raise ValueError(
+                f"legacy pre-design-API counter key {key!r}: flat "
+                f"eb_*/ep_* counters are no longer supported -- re-trace "
+                f"with the design API (counters keyed e/<design>/<comp>)")
     return out
 
 
 def counters_toggles(counters: dict, scale: float = 1.0) -> dict:
     """Per-design ``{"h": ..., "v": ...}`` pipeline toggles from
-    accumulated flat counters (legacy ``h_base``-style keys included)."""
+    accumulated flat counters (``h/<design>`` / ``v/<design>`` keys)."""
     out: dict[str, dict[str, float]] = {}
     for key, v in counters.items():
         if key.startswith(("h/", "v/")):
             axis, name = key.split("/", 1)
             out.setdefault(name, {})[axis] = float(v) * scale
-        elif key in ("h_base", "v_base"):
-            out.setdefault("baseline", {})[key[0]] = float(v) * scale
-        elif key in ("h_prop", "v_prop"):
-            out.setdefault("proposed", {})[key[0]] = float(v) * scale
+        elif key in ("h_base", "v_base", "h_prop", "v_prop"):
+            raise ValueError(
+                f"legacy pre-design-API toggle key {key!r}: re-trace "
+                f"with the design API (toggles keyed h/<design>)")
     return out
 
 

@@ -178,6 +178,35 @@ def sliding_window_attention(q, k, v, *, window: int, scale=None,
     return out.reshape(b, nb * bq, h, v.shape[-1])[:, :s]
 
 
+def paged_chunk_attention(q, k_cache, v_cache, positions_q, *, scale=None,
+                          softcap=0.0, constrain_q: bool = True):
+    """Multi-token causal decode for paged chunk prefill: ``q [B, C, H, D]``
+    against gathered dense cache views ``[B, Smax, Hkv, D]`` (page pool
+    rows re-assembled in logical order). Query ``i`` sits at absolute
+    position ``positions_q[b, i]`` and attends to cache positions ``<=``
+    it -- the chunk's own keys were scattered into the pool before the
+    gather, so intra-chunk causality and the paged history are covered by
+    one mask. Negative query positions mark right-padding: their rows are
+    fully masked (finite garbage out -- softmax of a constant row), and
+    callers never read them."""
+    b, sq, h, d = q.shape
+    hkv = k_cache.shape[2]
+    qg = _group_q(q, hkv)
+    if constrain_q:
+        qg = _try_constrain(qg, (None, None, None, None, "model"))
+    scale = scale if scale is not None else d ** -0.5
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k_cache
+                        ).astype(jnp.float32) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos[None, None, :] <= positions_q[:, :, None]    # [B, C, Smax]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v_cache)
+    return out.reshape(b, sq, h, v_cache.shape[-1])
+
+
 def decode_attention(q, k_cache, v_cache, cache_len, *, scale=None,
                      softcap=0.0, window: int = 0, constrain_q: bool = True):
     """Single-token decode: q ``[B, 1, H, D]`` against ``[B, Smax, Hkv, D]``

@@ -117,14 +117,22 @@ def logits_fn(params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
 # ------------------------------------------------------------------- apply
 def apply_model(params, cfg: ArchConfig, inputs: dict, *, states=None,
                 prefill=False, cache_len=0, constrain: Constrain = _id):
-    """Forward to final hidden states. Returns (h, new_states, aux)."""
+    """Forward to final hidden states. Returns (h, new_states, aux).
+
+    When ``inputs`` carries ``"pages"`` (a ``[B, MP]`` per-row page table,
+    see :mod:`repro.serve.paging`), ``states`` is interpreted as a paged
+    KV pool (``[P, page_size, ...]`` leaves) instead of per-row dense
+    caches; attention then scatters writes through the table and gathers
+    dense views for the score computation.
+    """
     with jax.named_scope("embed"):
         x, positions = embed_inputs(params, cfg, inputs,
                                     dtype=jnp.dtype(cfg.compute_dtype))
     x = constrain(x)
     x, new_states, aux = T.apply_stack(
         params["stack"], x, cfg, positions=positions, states=states,
-        prefill=prefill, cache_len=cache_len, constrain=constrain)
+        prefill=prefill, cache_len=cache_len, constrain=constrain,
+        pages=inputs.get("pages"))
     x = L.apply_norm(cfg.norm, params["final_norm"], x)
     return x, new_states, aux
 
@@ -385,6 +393,33 @@ def make_slot_prefill_step(cfg: ArchConfig, cache_len: int,
         return logits, states
 
     return slot_prefill_step
+
+
+def make_chunk_prefill_step(cfg: ArchConfig, constrain: Constrain = _id):
+    """(params, pool_states, inputs, length) -> (logits, pool_states).
+
+    One chunk of a PAGED prefill (see :mod:`repro.serve.paging`): the
+    inputs carry a batch-1 token window ``[1, C]`` at absolute
+    ``positions [1, C]`` plus the row's page table ``pages [1, MP]``.
+    The chunk's KV is scattered into the pool pages and its attention
+    reads the gathered paged history (earlier chunks, shared prefix
+    pages), so long prompts stream through admission C tokens at a time
+    instead of stalling it. Right-padding inside the final chunk uses
+    position ``-1`` as a sentinel: those writes land on the trash page
+    and those queries are fully masked. Returned logits are taken at
+    absolute position ``length - 1`` -- meaningful only on the chunk
+    that contains it (the last one); callers ignore the rest.
+    """
+    def chunk_prefill_step(params, states, inputs, length):
+        h, states, _ = apply_model(params, cfg, inputs, states=states,
+                                   constrain=constrain)
+        start = inputs["positions"][0, 0]
+        idx = jnp.clip(length - 1 - start, 0, h.shape[1] - 1)
+        h_last = jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=1)[:, 0]
+        logits = logits_fn(params, cfg, h_last)
+        return logits, states
+
+    return chunk_prefill_step
 
 
 def make_embed_step(cfg: ArchConfig):

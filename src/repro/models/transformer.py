@@ -140,9 +140,39 @@ def _conv_tail(x: jax.Array, cw: int) -> jax.Array:
                        (0, 0)))[:, -(cw - 1):]
 
 
+# ------------------------------------------------------------------ paging
+def _page_targets(pages, positions, page_size):
+    """Physical (page, offset) write targets for logical ``positions``.
+
+    ``pages [B, MP]`` is the per-row page table (entry 0 = the reserved
+    trash page), ``positions [B, S]`` the absolute logical positions. Out-
+    of-range or negative (= right-padding sentinel) positions redirect to
+    the trash page, so one scatter covers live rows, dead rows (all-trash
+    tables), and padded chunk tails without ever touching a real page.
+    """
+    mp = pages.shape[1]
+    pos = positions.astype(jnp.int32)
+    pg = jnp.take_along_axis(pages, jnp.clip(pos // page_size, 0, mp - 1),
+                             axis=1)
+    ok = (pos >= 0) & (pos < mp * page_size)
+    return jnp.where(ok, pg, 0), jnp.clip(pos, 0) % page_size
+
+
+def _gather_pages(pool, pages):
+    """Dense per-row logical view of a page pool: ``pool [P, ps, ...]`` +
+    ``pages [B, MP]`` -> ``[B, MP * ps, ...]``. Unallocated table entries
+    point at the trash page; whatever junk they contribute sits at logical
+    positions beyond the row's write coverage, which every caller masks by
+    position -- the same argument that makes a dead slot row harmless in
+    the dense cache."""
+    b, mp = pages.shape
+    view = jnp.take(pool, pages, axis=0)          # [B, MP, ps, ...]
+    return view.reshape((b, mp * pool.shape[1]) + pool.shape[2:])
+
+
 # --------------------------------------------------------------- attention
 def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
-                    state=None, prefill=False, cache_len=0):
+                    state=None, prefill=False, cache_len=0, pages=None):
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     scale = cfg.attn_scale or None
@@ -158,6 +188,33 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
     k = proj("wk", "bk", kv)
     v = proj("wv", "bv", kv)
     q, k = _rope_qk(cfg, q, k, positions)
+
+    if state is not None and pages is not None:   # ---- paged decode/chunk
+        # Pool-backed cache: scatter this step's keys/values into the
+        # row's pages, then GATHER a dense logical view and reuse the
+        # dense decode attention unchanged -- masked positions contribute
+        # exact zeros, so a single-token step is bit-identical to the
+        # slot cache's dense path (tests/test_serve_paging.py pins it).
+        kp, vp = state                            # [P, ps, kv, hd] pools
+        pgs = kp.shape[1]
+        pg, off = _page_targets(pages, positions, pgs)
+        kp = kp.at[pg, off].set(k.astype(kp.dtype))
+        vp = vp.at[pg, off].set(v.astype(vp.dtype))
+        kc = _gather_pages(kp, pages)
+        vc = _gather_pages(vp, pages)
+        if s == 1:
+            bpos = _decode_batch_pos(cfg, positions)
+            out = A.decode_attention(q, kc, vc, bpos + 1, scale=scale,
+                                     softcap=cfg.attn_softcap,
+                                     constrain_q=cfg.pos != "mrope")
+        else:                                     # chunked prefill
+            out = A.paged_chunk_attention(q, kc, vc, positions, scale=scale,
+                                          softcap=cfg.attn_softcap,
+                                          constrain_q=cfg.pos != "mrope")
+        out = out.reshape(b, s, h * hd)
+        with jax.named_scope("wo"):
+            out = out @ p["wo"].value.astype(x.dtype)
+        return out, (kp, vp)
 
     if state is not None:                       # ---- single-token decode
         bpos = _decode_batch_pos(cfg, positions)
@@ -235,7 +292,7 @@ def _ring_decode(q, kc, vc, slots, bpos, cfg, scale):
 
 # --------------------------------------------------------------------- MLA
 def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
-              prefill=False, cache_len=0):
+              prefill=False, cache_len=0, pages=None):
     mla = cfg.mla
     b, s, d = x.shape
     h = cfg.n_heads
@@ -256,11 +313,27 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
     kr = L.apply_rope(kr, positions, cfg.rope_theta)
 
     if state is not None:                       # ---- absorbed decode
-        ckv_c, kr_c = state
-        bpos = _decode_batch_pos(cfg, positions)
-        rows = jnp.arange(b)
-        ckv_c = ckv_c.at[rows, bpos].set(ckv[:, 0].astype(ckv_c.dtype))
-        kr_c = kr_c.at[rows, bpos].set(kr[:, 0, 0].astype(kr_c.dtype))
+        if pages is not None:                   # paged: pool-backed cache
+            ckv_p, kr_p = state                 # [P, ps, r], [P, ps, dr]
+            pg, off = _page_targets(pages, positions, ckv_p.shape[1])
+            new_state = (ckv_p.at[pg, off].set(ckv.astype(ckv_p.dtype)),
+                         kr_p.at[pg, off].set(kr[:, :, 0].astype(kr_p.dtype)))
+            ckv_c = _gather_pages(new_state[0], pages)
+            kr_c = _gather_pages(new_state[1], pages)
+            kpos = jnp.arange(ckv_c.shape[1])
+            # per-query causal mask [B, S, T]; for S == 1 this broadcasts
+            # to exactly the dense decode mask below (bit-identity)
+            mask = (kpos[None, None, :]
+                    <= positions.astype(jnp.int32)[:, :, None])[:, None]
+        else:
+            ckv_c, kr_c = state
+            bpos = _decode_batch_pos(cfg, positions)
+            rows = jnp.arange(b)
+            ckv_c = ckv_c.at[rows, bpos].set(ckv[:, 0].astype(ckv_c.dtype))
+            kr_c = kr_c.at[rows, bpos].set(kr[:, 0, 0].astype(kr_c.dtype))
+            new_state = (ckv_c, kr_c)
+            kpos = jnp.arange(ckv_c.shape[1])
+            mask = (kpos[None, :] <= bpos[:, None])[:, None, None, :]
         q_eff = jnp.einsum("bshe,rhe->bshr", q_nope,
                            p["w_uk"].value.astype(x.dtype))
         # keep the absorbed query latent-sharded like the cache so the
@@ -269,15 +342,13 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
         s_nope = jnp.einsum("bshr,btr->bhst", q_eff, ckv_c)
         s_rope = jnp.einsum("bshe,bte->bhst", q_rope, kr_c)
         scores = (s_nope + s_rope).astype(jnp.float32) * ((dn + dr) ** -0.5)
-        kpos = jnp.arange(ckv_c.shape[1])
-        mask = kpos[None, :] <= bpos[:, None]
-        scores = jnp.where(mask[:, None, None, :], scores, A.NEG_INF)
+        scores = jnp.where(mask, scores, A.NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         lat = jnp.einsum("bhst,btr->bshr", probs, ckv_c)
         out = jnp.einsum("bshr,rhe->bshe", lat,
                          p["w_uv"].value.astype(x.dtype))
         out = out.reshape(b, s, h * dv) @ p["wo"].value.astype(x.dtype)
-        return out, (ckv_c, kr_c)
+        return out, new_state
 
     # ---- parallel: expand per-head keys/values
     k_nope = jnp.einsum("bsr,rhe->bshe", ckv, p["w_uk"].value.astype(x.dtype))
@@ -295,14 +366,19 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
 
 # ------------------------------------------------------------------- mixers
 def apply_mixer(p, x, cfg: ArchConfig, mixer: str, *, positions,
-                state=None, prefill=False, cache_len=0):
+                state=None, prefill=False, cache_len=0, pages=None):
+    if pages is not None and mixer not in ("attn", "mla"):
+        raise ValueError(
+            f"paged decode supports position-masked cache mixers "
+            f"(attn/mla) only, not {mixer!r}")
     if mixer in ("attn", "local"):
         return apply_attention(p, x, cfg, local=(mixer == "local"),
                                positions=positions, state=state,
-                               prefill=prefill, cache_len=cache_len)
+                               prefill=prefill, cache_len=cache_len,
+                               pages=pages)
     if mixer == "mla":
         return apply_mla(p, x, cfg, positions=positions, state=state,
-                         prefill=prefill, cache_len=cache_len)
+                         prefill=prefill, cache_len=cache_len, pages=pages)
     if mixer == "rglru":
         return R.apply_recurrent_block(p, x, state, want_state=prefill)
     if mixer == "mlstm":
@@ -387,7 +463,7 @@ def _slstm_decode(p, x, cfg, conv_buf, cell):
 # -------------------------------------------------------------------- block
 def apply_block(p, x, cfg: ArchConfig, spec: str, *, positions,
                 state=None, prefill=False, cache_len=0,
-                constrain=lambda a: a):
+                constrain=lambda a: a, pages=None):
     mixer, ffn = parse_spec(spec)
     aux = jnp.zeros((), jnp.float32)
     h = L.apply_norm(cfg.norm, p["norm1"], x)
@@ -397,7 +473,8 @@ def apply_block(p, x, cfg: ArchConfig, spec: str, *, positions,
     with jax.named_scope(mixer):
         out, new_state = apply_mixer(p["mixer"], h, cfg, mixer,
                                      positions=positions, state=state,
-                                     prefill=prefill, cache_len=cache_len)
+                                     prefill=prefill, cache_len=cache_len,
+                                     pages=pages)
     # constraining each residual add to the SP layout lets GSPMD lower the
     # row-parallel output reductions to reduce-scatters (see §Perf cell B)
     x = constrain(x + cfg.resid_mult * out)
@@ -433,7 +510,7 @@ def make_stack(key, cfg: ArchConfig) -> dict:
 
 def apply_stack(params, x, cfg: ArchConfig, *, positions, states=None,
                 prefill=False, cache_len=0,
-                constrain: Callable = lambda a: a):
+                constrain: Callable = lambda a: a, pages=None):
     """Run all layers. Returns (x, new_states | None, aux_sum)."""
     decode = states is not None
 
@@ -445,7 +522,8 @@ def apply_stack(params, x, cfg: ArchConfig, *, positions, states=None,
             with jax.named_scope(f"b{i}"):
                 x, nst, aux = apply_block(
                     gparams[f"b{i}"], x, cfg, spec, positions=positions,
-                    state=st, prefill=prefill, cache_len=cache_len)
+                    state=st, prefill=prefill, cache_len=cache_len,
+                    pages=pages)
             new_states[f"b{i}"] = nst
             aux_sum = aux_sum + aux
         x = constrain(x)
@@ -465,7 +543,7 @@ def apply_stack(params, x, cfg: ArchConfig, *, positions, states=None,
             x, nst, aux = apply_block(params["head"][i], x, cfg, spec,
                                       positions=positions, state=st,
                                       prefill=prefill, cache_len=cache_len,
-                                      constrain=constrain)
+                                      constrain=constrain, pages=pages)
         head_aux = head_aux + aux
         new_head.append(nst)
     x = constrain(x)
@@ -518,7 +596,7 @@ def apply_stack(params, x, cfg: ArchConfig, *, positions, states=None,
             x, nst, aux = apply_block(params["tail"][i], x, cfg, spec,
                                       positions=positions, state=st,
                                       prefill=prefill, cache_len=cache_len,
-                                      constrain=constrain)
+                                      constrain=constrain, pages=pages)
         aux_total = aux_total + aux
         new_tail.append(nst)
     x = constrain(x)

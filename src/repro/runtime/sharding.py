@@ -183,6 +183,21 @@ def cache_shardings(mesh: Mesh, states) -> Any:
     }
 
 
+def paged_cache_shardings(mesh: Mesh, states) -> Any:
+    """Shardings for a paged KV pool (``serve.paging.cache``).
+
+    The pool is ``lm.make_decode_state`` with the PAGE axis in the slot
+    axis's role (leaves ``[P, page_size, ...]``, scanned groups
+    ``[G, P, page_size, ...]``), so the slot-cache rules apply verbatim:
+    pages shard over the data axes, one trailing feature dim over
+    "model", and the dim after the page axis is the within-page sequence
+    dim -- never sharded. Keeping the reserved trash page inside the pool
+    (rather than allocating ``num_pages - 1``) is what preserves the
+    page-axis divisibility this layout wants.
+    """
+    return cache_shardings(mesh, states)
+
+
 def batch_shardings(mesh: Mesh, batch) -> Any:
     """Input batches: shard the batch dim over the data axes; leading-
     component leaves (M-RoPE positions [3, B, S]) shard dim 1."""

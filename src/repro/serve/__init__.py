@@ -21,16 +21,26 @@ Pass ``mesh=launch.mesh.make_host_mesh(model=...)`` to ``ServeEngine``
 to serve SPMD over a device mesh (TP-only weight sharding, sharded slot
 cache, in-place donated decode) with bit-identical tokens and power
 reports -- see docs/serving.md#mesh-serving and ``tests/multidevice``.
+
+Set ``ServeConfig.paging = PagingConfig(...)`` and the same constructor
+returns a :class:`~repro.serve.paging.engine.PagedServeEngine`: a
+block-paged KV cache (per-request page tables over one global pool),
+chunked prefill, hash-consed shared-prefix reuse, and a class-aware
+preempting scheduler -- with per-request power reports that still sum
+bit-exactly to the serve-wide trace. See docs/serving.md#paged-serving.
 """
 from .cache import SlotCache                                  # noqa: F401
 from .engine import ServeConfig, ServeEngine                  # noqa: F401
+from .paging import (ClassScheduler, PagedKVCache,            # noqa: F401
+                     PagingConfig, PrefixCache, SchedClass)
 from .power import PowerAccountant, RequestPowerReport        # noqa: F401
 from .request import Request, RequestStatus                   # noqa: F401
 from .sampling import GREEDY, SamplingParams, sample_tokens   # noqa: F401
 from .scheduler import FIFOScheduler                          # noqa: F401
 
 __all__ = [
-    "FIFOScheduler", "GREEDY", "PowerAccountant", "Request",
-    "RequestPowerReport", "RequestStatus", "SamplingParams",
+    "ClassScheduler", "FIFOScheduler", "GREEDY", "PagedKVCache",
+    "PagingConfig", "PowerAccountant", "PrefixCache", "Request",
+    "RequestPowerReport", "RequestStatus", "SamplingParams", "SchedClass",
     "ServeConfig", "ServeEngine", "SlotCache", "sample_tokens",
 ]

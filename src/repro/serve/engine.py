@@ -77,10 +77,21 @@ class ServeConfig:
     power_monitor: bool = False   # per-request BIC+ZVG power reports
     monitor: pm_monitor.MonitorConfig = pm_monitor.DEFAULT_MONITOR
     power_sample_every: int = 1   # stream every k-th decode step
+    # block-paged KV cache mode (repro.serve.paging); None = slot cache.
+    # When set, max_slots is ignored in favor of paging.max_rows and
+    # cache_len becomes the per-request position HORIZON, not a
+    # per-request HBM reservation
+    paging: "object | None" = None
 
 
 class ServeEngine:
     """Continuous-batching serving over one model + one slot cache."""
+
+    def __new__(cls, params=None, cfg=None, scfg=None, mesh=None):
+        if cls is ServeEngine and scfg is not None and scfg.paging is not None:
+            from .paging.engine import PagedServeEngine
+            return super().__new__(PagedServeEngine)
+        return super().__new__(cls)
 
     def __init__(self, params, cfg: ArchConfig, scfg: ServeConfig,
                  mesh=None):
@@ -99,10 +110,7 @@ class ServeEngine:
         else:
             self.param_shardings = None
         self.params = params
-        self.cache = SlotCache(cfg, scfg.max_slots, scfg.cache_len,
-                               dtype=jnp.dtype(cfg.compute_dtype),
-                               mesh=mesh)
-        self.scheduler = FIFOScheduler(scfg.cache_len)
+        self._build_state()        # cache + scheduler (paged overrides)
         prefill_fn = lm.make_slot_prefill_step(cfg, scfg.cache_len)
         decode_fn = lm.make_decode_step(cfg)
         embed_fn = lm.make_embed_step(cfg)
@@ -138,8 +146,8 @@ class ServeEngine:
                                   in_shardings=(self.param_shardings, rep),
                                   out_shardings=rep)
         self._running: dict[int, Request] = {}
-        self._temp = np.zeros(scfg.max_slots, np.float32)
-        self._topk = np.zeros(scfg.max_slots, np.int32)
+        self._temp = np.zeros(self._batch, np.float32)
+        self._topk = np.zeros(self._batch, np.int32)
         self._key = jax.random.key(scfg.seed)
         mixers = {parse_spec(s)[0]
                   for s in (*cfg.pattern, *cfg.head, *cfg.tail)}
@@ -158,6 +166,15 @@ class ServeEngine:
         self._power_weights = weights
         self.stats = {"steps": 0, "decode_steps": 0, "tokens": 0,
                       "occupancy_sum": 0, "peak_live": 0}
+
+    def _build_state(self):
+        """Cache + scheduler + decode batch width (subclass hook)."""
+        self._batch = self.scfg.max_slots
+        self.cache = SlotCache(self.cfg, self.scfg.max_slots,
+                               self.scfg.cache_len,
+                               dtype=jnp.dtype(self.cfg.compute_dtype),
+                               mesh=self.mesh)
+        self.scheduler = FIFOScheduler(self.scfg.cache_len)
 
     # -------------------------------------------------------------- submit
     def submit(self, req: Request | list[int], **kw) -> Request:
@@ -179,12 +196,8 @@ class ServeEngine:
         """One engine iteration: admit, one shared decode, retire.
         Returns the requests retired during this step."""
         retired: list[Request] = []
-        while self.cache.n_free and self.scheduler.n_pending:
-            req = self.scheduler.pop_admissible(1)[0]
-            self._admit(req)
-            self._maybe_retire(req, retired)   # max_new == 1 / prompt EOS
-
-        live = self.cache.live_slots()
+        self._admission_phase(retired)
+        live = self._decode_ready(retired)
         if live:
             inputs = self.cache.decode_inputs()
             if self.accountant is not None and self.accountant.tick(live):
@@ -211,6 +224,18 @@ class ServeEngine:
                                           len(live))
         self.stats["steps"] += 1
         return retired
+
+    def _admission_phase(self, retired: list[Request]) -> None:
+        while self.cache.n_free and self.scheduler.n_pending:
+            req = self.scheduler.pop_admissible(1)[0]
+            self._admit(req)
+            self._maybe_retire(req, retired)   # max_new == 1 / prompt EOS
+
+    def _decode_ready(self, retired: list[Request]) -> list[int]:
+        """Rows entering this step's shared decode (the paged engine
+        first secures a page under every row's next write position here,
+        which may preempt)."""
+        return self.cache.live_slots()
 
     def run(self, max_steps: int = 0) -> list[Request]:
         """Pump :meth:`step` until queue and slots drain (or max_steps)."""
@@ -250,37 +275,56 @@ class ServeEngine:
         toks[0, :length] = req.prompt
         logits, states1 = self._prefill(
             self.params, {"tokens": jnp.asarray(toks)}, np.int32(length))
-        self._temp[slot] = req.sampling.temperature
-        self._topk[slot] = req.sampling.top_k
-        self._key, sub = jax.random.split(self._key)
-        first = int(jax.device_get(sampling.sample_tokens(
-            sub, logits, jnp.full((1,), req.sampling.temperature,
-                                  jnp.float32),
-            jnp.full((1,), req.sampling.top_k, jnp.int32)))[0])
+        first = self._sample_first(req, logits)
         self.cache.write_prefill(slot, states1, first, length)
         req.generated.append(first)
         self.stats["tokens"] += 1
         self._running[slot] = req
         if self.accountant is not None:
             self.accountant.begin(slot, req.uid, length)
-            # embed the SAME bucketed token array prefill just consumed
-            # (one compile per bucket, not per distinct prompt length);
-            # the slice back to the real rows is exact -- embedding is
-            # per-token, so padding never leaks into the first `length`
-            x = self._embed(self.params,
-                            {"tokens": jnp.asarray(toks)})[:, :length]
-            for site, w in self._power_weights:
-                self.accountant.record_prefill(slot, x, w, site)
+            self._record_prefill_power(slot, toks, 0, length)
+
+    def _sample_first(self, req: Request, logits) -> int:
+        """Install the request's sampling params on its slot and draw its
+        first token from batch-1 prefill logits."""
+        slot = req.slot
+        self._temp[slot] = req.sampling.temperature
+        self._topk[slot] = req.sampling.top_k
+        self._key, sub = jax.random.split(self._key)
+        return int(jax.device_get(sampling.sample_tokens(
+            sub, logits, jnp.full((1,), req.sampling.temperature,
+                                  jnp.float32),
+            jnp.full((1,), req.sampling.top_k, jnp.int32)))[0])
+
+    def _record_prefill_power(self, slot: int, toks: np.ndarray,
+                              lo: int, length: int) -> None:
+        """Stream the prompt rows ``[lo, length)`` of a bucketed token
+        array through the monitored sites (one record_prefill per site).
+
+        Embeds the SAME bucketed token array prefill just consumed (one
+        compile per bucket, not per distinct prompt length); the slice
+        back to the real rows is exact -- embedding is per-token, so
+        padding never leaks into ``[lo, length)``. ``lo > 0`` is the
+        prefix-reuse case: the request pays only for the suffix it
+        actually computed (the first-payer contract)."""
+        x = self._embed(self.params,
+                        {"tokens": jnp.asarray(toks)})[:, lo:length]
+        for site, w in self._power_weights:
+            self.accountant.record_prefill(slot, x, w, site)
 
     def _maybe_retire(self, req: Request, retired: list[Request]) -> None:
         reason = self.scheduler.retire_reason(
             req, int(self.cache.positions[req.slot]), self.scfg.eos_id)
         if not reason:
             return
+        self._retire(req, reason, retired)
+
+    def _retire(self, req: Request, reason: str,
+                retired: list[Request]) -> None:
         slot = req.slot
         if self.accountant is not None:
             req.power = self.accountant.finish(slot, len(req.generated))
-        self.cache.release(slot)
+        self._release_slot(slot)
         self._temp[slot] = 0.0
         self._topk[slot] = 0
         self._running.pop(slot)
@@ -288,6 +332,15 @@ class ServeEngine:
         req.finish_reason = reason
         req.finish_step = self.stats["steps"]
         retired.append(req)
+
+    def _release_slot(self, slot: int) -> None:
+        self.cache.release(slot)
+
+    def cancel(self, uid: int) -> bool:
+        """Drop a request that has not been admitted yet (the slot cache
+        never evicts running work; the paged engine extends cancel to
+        running and preempted requests)."""
+        return self.scheduler.cancel(uid)
 
     # -------------------------------------------------------------- views
     def trace_report(self):

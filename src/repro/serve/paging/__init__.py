@@ -1,0 +1,29 @@
+"""Block-paged KV serving: page pool, prefix trie, class scheduler.
+
+``PagedServeEngine`` is exported lazily: ``paging.engine`` imports
+``serve.engine`` (which itself imports this package for
+``PagingConfig``), so an eager import here would be circular. Engine
+construction goes through ``ServeEngine.__new__`` anyway -- by the time
+it runs, both modules are fully initialized.
+"""
+from .cache import PagedKVCache, TRASH
+from .config import PagingConfig, SchedClass
+from .prefix import PrefixCache
+from .scheduler import ClassScheduler
+
+__all__ = [
+    "ClassScheduler",
+    "PagedKVCache",
+    "PagedServeEngine",
+    "PagingConfig",
+    "PrefixCache",
+    "SchedClass",
+    "TRASH",
+]
+
+
+def __getattr__(name):
+    if name == "PagedServeEngine":
+        from .engine import PagedServeEngine
+        return PagedServeEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

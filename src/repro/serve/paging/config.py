@@ -1,0 +1,77 @@
+"""Configuration for the paged serving mode.
+
+Attach a :class:`PagingConfig` to ``ServeConfig.paging`` and
+``ServeEngine`` switches from the fixed-slot cache to the block-paged KV
+cache (:mod:`repro.serve.paging.cache`): requests share one global pool
+of fixed-size pages through per-request page tables, so HBM is committed
+page-by-page as sequences grow instead of one worst-case contiguous
+region per slot -- admitted concurrency is bounded by actual tokens held,
+not by ``num_slots``.
+
+Scheduling classes (:class:`SchedClass`) are part of the paged mode:
+admission picks the highest-priority non-empty class, breaks priority
+ties by deficit-weighted round-robin, and page pressure preempts the
+lowest-priority latest-admitted victim (its pages are reclaimed and the
+request re-queued at the front of its class for re-prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedClass:
+    """One scheduling class.
+
+    priority: higher admits first and is preempted last.
+    weight: admission share among classes of EQUAL priority (deficit
+      round-robin: weights 3:1 admit roughly 3 of A per 1 of B).
+    """
+    name: str = "default"
+    priority: int = 0
+    weight: int = 1
+
+    def __post_init__(self):
+        if self.weight < 1:
+            raise ValueError(f"weight must be >= 1: {self.weight}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagingConfig:
+    """Knobs of the paged serving mode.
+
+    page_size: KV positions per page; must divide ``cache_len``.
+    num_pages: total pool pages (page 0 is reserved as the write-trash
+      page, so ``num_pages - 1`` are allocatable). Equal-HBM comparison
+      against the slot engine: ``num_pages * page_size`` vs
+      ``max_slots * cache_len`` positions.
+    max_rows: decode batch width (concurrently DECODING requests); unlike
+      the slot engine's ``max_slots`` this caps rows, not HBM -- many
+      short requests fit where one slot's worth of pages would sit idle.
+    prefill_chunk: > 0 streams prompts longer than this through admission
+      in chunks of this many tokens (one chunk per engine step); 0
+      prefills whole prompts in one call, exactly like the slot engine.
+    prefix_cache: hash-consed sharing of full-page prompt prefixes with
+      copy-on-write forking (shared pages are immutable by construction;
+      a fork copies the page-table prefix, never the pages).
+    classes: scheduling classes; () = a single default class (pure FIFO).
+    """
+    page_size: int = 16
+    num_pages: int = 64
+    max_rows: int = 8
+    prefill_chunk: int = 0
+    prefix_cache: bool = False
+    classes: tuple[SchedClass, ...] = ()
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1: {self.page_size}")
+        if self.num_pages < 2:
+            raise ValueError(
+                f"num_pages must be >= 2 (page 0 is the reserved trash "
+                f"page): {self.num_pages}")
+        if self.max_rows < 1:
+            raise ValueError(f"max_rows must be >= 1: {self.max_rows}")
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0: {self.prefill_chunk}")

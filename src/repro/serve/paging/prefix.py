@@ -1,0 +1,146 @@
+"""Hash-consed shared-prefix cache over full KV pages.
+
+Sharing is sound only at page granularity and only for *causal* caches:
+every cached entry at position ``p`` (k/v for attn, ckv/kr for mla) is a
+projection of the residual stream at ``p``, which depends exclusively on
+tokens ``0..p``. Two prompts agreeing on their first ``n * page_size``
+tokens therefore produce bitwise-identical content for those ``n`` pages,
+so a single physical copy can back both page tables. Partial pages are
+never shared (the tail of a page would mix positions from different
+suffixes), and a request always keeps at least one unshared prompt token
+so its own prefill has a real last position to produce logits from.
+
+The trie is keyed by page-sized token chunks. Each node owns one pool
+page and carries a refcount of current readers plus the refcounts of its
+descendants' readers transitively (``parent.refs >= child.refs``), so a
+node is evictable exactly when it is a leaf with ``refs == 0``. Eviction
+is LRU among evictable leaves and is driven by the engine only under
+page pressure -- a cached prefix costs nothing while the pool is slack.
+
+Copy-on-write is implicit: shared pages are installed read-only at the
+front of a request's page table and the model never writes them (prefill
+states land in the request's own pages; decode writes target positions
+past the prompt). "Forking" a shared prefix is just copying table
+entries -- no page data ever moves.
+"""
+from __future__ import annotations
+
+
+class _Node:
+    __slots__ = ("chunk", "page", "refs", "last_use", "children", "parent")
+
+    def __init__(self, chunk: tuple, page: int, parent):
+        self.chunk = chunk
+        self.page = page
+        self.refs = 0
+        self.last_use = 0
+        self.children: dict[tuple, _Node] = {}
+        self.parent = parent
+
+
+class PrefixCache:
+    """Trie of full prompt-prefix pages with transitive refcounts."""
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self._root = _Node((), -1, None)   # sentinel, holds no page
+        self._clock = 0                    # LRU tick (engine steps ok too)
+        self._by_page: dict[int, _Node] = {}
+        self.lookups = 0
+        self.hit_pages = 0
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    def __len__(self) -> int:
+        return len(self._by_page)
+
+    # ---------------------------------------------------------- matching
+    def _chunks(self, tokens, max_pages: int):
+        ps = self.page_size
+        n = min(len(tokens) // ps, max_pages)
+        return [tuple(tokens[i * ps:(i + 1) * ps]) for i in range(n)]
+
+    def match(self, tokens, max_pages: int) -> list[int]:
+        """Longest cached prefix of ``tokens`` (<= ``max_pages`` pages)
+        and *acquire* it: refcounts along the chain are bumped and the
+        pages pinned against eviction. Returns the page ids in prefix
+        order; release with :meth:`release`."""
+        self.lookups += 1
+        self._clock += 1
+        chain: list[_Node] = []
+        node = self._root
+        for chunk in self._chunks(tokens, max_pages):
+            nxt = node.children.get(chunk)
+            if nxt is None:
+                break
+            chain.append(nxt)
+            node = nxt
+        for n in chain:
+            n.refs += 1
+            n.last_use = self._clock
+        self.hit_pages += len(chain)
+        return [n.page for n in chain]
+
+    def release(self, pages: list[int]) -> None:
+        """Drop one reference from each page of an acquired chain."""
+        for p in pages:
+            node = self._by_page[p]
+            if node.refs <= 0:
+                raise RuntimeError(f"refcount underflow on page {p}")
+            node.refs -= 1
+
+    # ---------------------------------------------------------- inserts
+    def insert(self, tokens, held_pages: list[int],
+               new_pages: list[int]) -> int:
+        """Extend the cached chain for ``tokens`` past the caller's
+        already-acquired ``held_pages`` prefix with prefill-written
+        ``new_pages``, transferring their ownership to the cache.
+
+        Stops at the first chunk another request registered in the
+        meantime (it matched nothing at admission, so its physical page
+        differs) -- that page and the rest stay owned by the caller.
+        Returns the number of pages absorbed; absorbed nodes are left
+        acquired (refs bumped), so the caller releases its full
+        ``held + absorbed`` chain at finish."""
+        self._clock += 1
+        chunks = self._chunks(tokens, len(held_pages) + len(new_pages))
+        node = self._root
+        for i, p in enumerate(held_pages):
+            node = node.children[chunks[i]]
+            if node.page != p:
+                raise RuntimeError(
+                    f"held page {p} does not match cached chain")
+            node.last_use = self._clock
+        absorbed = 0
+        for chunk, page in zip(chunks[len(held_pages):], new_pages):
+            if chunk in node.children:
+                break
+            nxt = _Node(chunk, page, node)
+            node.children[chunk] = nxt
+            self._by_page[page] = nxt
+            self.inserted_pages += 1
+            nxt.refs += 1
+            nxt.last_use = self._clock
+            node = nxt
+            absorbed += 1
+        return absorbed
+
+    # ---------------------------------------------------------- eviction
+    def pop_evictable(self) -> int:
+        """Detach and return the LRU unreferenced leaf's page id, or -1
+        when every cached page is pinned."""
+        best = None
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.children:
+                stack.extend(n.children.values())
+            elif n.refs == 0 and (best is None
+                                  or n.last_use < best.last_use):
+                best = n
+        if best is None:
+            return -1
+        best.parent.children.pop(best.chunk)
+        self._by_page.pop(best.page)
+        self.evicted_pages += 1
+        return best.page

@@ -1,0 +1,125 @@
+"""Class-aware admission for the paged engine.
+
+Extends the FIFO contract along two axes while keeping its feasibility
+validation and retirement rules:
+
+* **Strict priority across classes** -- admission only ever considers the
+  highest-priority classes that have queued work; a lower class admits
+  nothing while a higher one is backlogged (and under page pressure its
+  running requests are the first preemption victims, see the engine).
+* **Deficit round-robin within a priority** -- classes of equal priority
+  share admission in proportion to their ``weight``: each class carries a
+  credit balance; a pick goes to the candidate with the most credit
+  (declaration order breaks ties) and costs one credit; when every
+  candidate is broke, all candidates recharge by their weight. Weights
+  3:1 therefore admit ~3 requests of one class per 1 of the other under
+  sustained backlog, while an idle class loses nothing (credits only move
+  when the class is a candidate).
+
+Unlike the slot engine, admission here does NOT imply run-to-completion:
+the paged pool can over-subscribe rows, so page pressure may preempt a
+running request. Preemption re-queues at the FRONT of the victim's class
+(:meth:`ClassScheduler.requeue_front`) -- it keeps its admission
+seniority and re-admits before any later arrival of its class.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+from ..request import Request, RequestStatus
+from ..scheduler import FIFOScheduler
+from .config import SchedClass
+
+
+class ClassScheduler(FIFOScheduler):
+    """Priority classes + weighted DRR, FIFO within each class."""
+
+    def __init__(self, cache_len: int,
+                 classes: tuple[SchedClass, ...] = (),
+                 page_size: int = 0, usable_pages: int = 0):
+        super().__init__(cache_len)
+        if not classes:
+            classes = (SchedClass(),)
+        if len({c.name for c in classes}) != len(classes):
+            raise ValueError("duplicate class names")
+        self.classes: dict[str, SchedClass] = {c.name: c for c in classes}
+        self.queues: dict[str, deque[Request]] = {
+            c.name: deque() for c in classes}
+        self.credits: dict[str, int] = {c.name: 0 for c in classes}
+        self.page_size = page_size
+        self.usable_pages = usable_pages
+
+    # ------------------------------------------------------------ submit
+    def validate(self, req: Request) -> None:
+        super().validate(req)
+        if req.klass not in self.classes:
+            raise ValueError(
+                f"unknown scheduling class {req.klass!r}; "
+                f"registered: {sorted(self.classes)}")
+        if self.page_size:
+            # a request must be runnable ALONE: its worst-case footprint
+            # in pages has to fit the allocatable pool, else page
+            # acquisition could stall forever with no victim to preempt
+            footprint = req.prompt_len + req.max_new_tokens
+            need = -(-footprint // self.page_size)
+            if need > self.usable_pages:
+                raise ValueError(
+                    f"request needs {need} cache pages worst-case "
+                    f"({footprint} positions / page_size "
+                    f"{self.page_size}) but the pool has only "
+                    f"{self.usable_pages} allocatable pages")
+
+    def _enqueue(self, req: Request) -> None:
+        self.queues[req.klass].append(req)
+
+    def requeue_front(self, req: Request) -> None:
+        """Re-queue a preempted request ahead of its whole class."""
+        req.status = RequestStatus.QUEUED
+        self.queues[req.klass].appendleft(req)
+
+    # ------------------------------------------------------------- queue
+    @property
+    def n_pending(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def find(self, uid: int) -> Request | None:
+        for q in self.queues.values():
+            for req in q:
+                if req.uid == uid:
+                    return req
+        return None
+
+    def cancel(self, uid: int) -> bool:
+        for q in self.queues.values():
+            for req in q:
+                if req.uid == uid:
+                    q.remove(req)
+                    req.status = RequestStatus.FINISHED
+                    req.finish_reason = "cancelled"
+                    return True
+        return False
+
+    def pop_admissible(self, n_free_slots: int) -> list[Request]:
+        out: list[Request] = []
+        while len(out) < n_free_slots:
+            req = self._pick()
+            if req is None:
+                break
+            out.append(req)
+        return out
+
+    def _pick(self) -> Request | None:
+        ready = [name for name, q in self.queues.items() if q]
+        if not ready:
+            return None
+        top = max(self.classes[name].priority for name in ready)
+        tier = [name for name in ready
+                if self.classes[name].priority == top]
+        if all(self.credits[name] <= 0 for name in tier):
+            for name in tier:
+                self.credits[name] += self.classes[name].weight
+        # declaration order breaks credit ties: dicts preserve insertion
+        # order and `tier` inherits it from self.queues
+        name = max(tier, key=lambda n: self.credits[n])
+        self.credits[name] -= 1
+        return self.queues[name].popleft()

@@ -169,12 +169,34 @@ class PowerAccountant:
     def begin(self, slot: int, uid: int, prompt_tokens: int) -> None:
         self._slots[slot] = _SlotAcc(uid, prompt_tokens)
 
+    def suspend(self, slot: int) -> _SlotAcc:
+        """Detach a preempted request's accumulator WITHOUT booking it:
+        nothing reaches the serve-wide capture until the request finally
+        retires, so preemption cannot double-count or leak energy. Hand
+        the accumulator back via :meth:`resume` at re-admission."""
+        return self._slots.pop(slot)
+
+    def resume(self, slot: int, acc: _SlotAcc) -> None:
+        """Re-attach a suspended accumulator to the request's new slot.
+        Subsequent record_prefill calls (the re-prefill of prompt +
+        generated-so-far) ADD to the suspended sums -- recomputed KV is
+        honestly paid-for energy, exactly what preemption costs."""
+        if slot in self._slots:
+            raise RuntimeError(f"slot {slot} already accounted")
+        self._slots[slot] = acc
+
     def finish(self, slot: int, new_tokens: int) -> RequestPowerReport:
         """Freeze the slot's sums into a report AND book the same frozen,
         extrapolated per-site counters into the serve-wide capture (one
         record_counters call per site per request, so capture totals equal
         the sum of retired requests' reports by construction)."""
-        acc = self._slots.pop(slot)
+        return self.finish_detached(self._slots.pop(slot), new_tokens)
+
+    def finish_detached(self, acc: _SlotAcc,
+                        new_tokens: int) -> RequestPowerReport:
+        """Freeze a (possibly suspended) accumulator directly -- the
+        retirement path for a request cancelled while preempted, which
+        holds real prefill energy but occupies no slot."""
         scale = acc.decode_steps / max(acc.sampled_steps, 1)
         total: dict[str, float] = {}
         zf_sum = zf_n = 0.0
@@ -237,9 +259,15 @@ class PowerAccountant:
             m, A.shape[1], weight.shape[1], self.mcfg, sampled_m=ms)
         scaled = {k: v * factor for k, v in counters.items()}
         acc = self._slots[slot]
-        rec = acc.prefill.setdefault(
-            f"prefill/{site}",
-            _SiteRec((1, A.shape[0], A.shape[1], weight.shape[1])))
+        rec = acc.prefill.get(f"prefill/{site}")
+        if rec is None:
+            rec = acc.prefill[f"prefill/{site}"] = _SiteRec(
+                (1, A.shape[0], A.shape[1], weight.shape[1]))
+        else:
+            # a re-prefill after preemption streams more rows through the
+            # same site: grow the booked MAC extent with the energy
+            rec.shape = (1, rec.shape[1] + A.shape[0],
+                         rec.shape[2], rec.shape[3])
         rec.add(scaled, zf)
 
     def tick(self, slots: list[int]) -> bool:

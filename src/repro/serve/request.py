@@ -38,6 +38,8 @@ class Request:
     max_new_tokens: int = 16
     sampling: SamplingParams = SamplingParams()
     uid: int = -1
+    klass: str = "default"         # scheduling class (paged engine; the
+                                   # slot engine's FIFO ignores it)
 
     # ---- engine-owned state --------------------------------------------
     status: RequestStatus = RequestStatus.QUEUED
@@ -49,6 +51,8 @@ class Request:
     submit_step: int = -1          # engine step counters (set by the
     start_step: int = -1           # engine): queueing delay is
     finish_step: int = -1          # start_step - submit_step
+    preemptions: int = 0           # times evicted under page pressure and
+                                   # re-queued (paged engine only)
     power: "object | None" = None  # RequestPowerReport when accounting is on
 
     @property

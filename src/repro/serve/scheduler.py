@@ -29,7 +29,9 @@ class FIFOScheduler:
         self._next_uid = 0
 
     # ------------------------------------------------------------ submit
-    def submit(self, req: Request) -> Request:
+    def validate(self, req: Request) -> None:
+        """Feasibility checks shared by every scheduler; raises ValueError
+        on requests that could never run."""
         if req.prompt_len < 1:
             raise ValueError("empty prompt")
         if req.max_new_tokens < 1:
@@ -41,15 +43,28 @@ class FIFOScheduler:
                 f"request needs {footprint} cache positions "
                 f"({req.prompt_len} prompt + {req.max_new_tokens} new) but "
                 f"cache_len is {self.cache_len}")
+
+    def _enqueue(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def submit(self, req: Request) -> Request:
+        self.validate(req)
         req.uid = self._next_uid
         self._next_uid += 1
         req.status = RequestStatus.QUEUED
-        self.pending.append(req)
+        self._enqueue(req)
         return req
 
     @property
     def n_pending(self) -> int:
         return len(self.pending)
+
+    def find(self, uid: int) -> Request | None:
+        """The queued request with this uid, if any."""
+        for req in self.pending:
+            if req.uid == uid:
+                return req
+        return None
 
     def cancel(self, uid: int) -> bool:
         """Drop a still-queued request (False when unknown / already

@@ -11,12 +11,16 @@ network-level aggregates computed the paper's way -- energies summed
 Savings ratios are relative to the report's ``reference`` design (first
 in the monitor's design list) and headline numbers quote its ``primary``
 design (second in the list) -- for the default paper pair these are
-``"baseline"`` and ``"proposed"``, making the legacy twin-field views
-(``energy_base``/``saving_total``/...) exact property shims. Per-site
-greedy selection (:func:`repro.design.select.apply_selection`) injects a
-``"selected"`` pseudo-design that flows through the same machinery.
+``"baseline"`` and ``"proposed"``; site energies are addressed by design
+name (``site.energy(design)``), never by hardwired base/prop fields.
+Per-site greedy selection (:func:`repro.design.select.apply_selection`)
+injects a ``"selected"`` pseudo-design that flows through the same
+machinery.
 
 Reports serialize to JSON (round-trippable), CSV, and a text table.
+JSON exports written before the design API (flat ``energy_base`` site
+fields, no per-site ``designs`` dict) are rejected with a clear error --
+re-trace the model instead of loading them.
 """
 from __future__ import annotations
 
@@ -30,8 +34,7 @@ from .capture import TraceCapture
 #: derived per-site scalars emitted to JSON for human consumption; they
 #: are reconstructed from ``designs`` on load, never parsed back
 _DERIVED = ("activity_reduction", "saving_total", "saving_streaming",
-            "streaming_share", "energy_base", "energy_prop",
-            "energy_base_streaming", "energy_prop_streaming")
+            "streaming_share")
 
 
 @dataclasses.dataclass
@@ -39,8 +42,8 @@ class SitePower:
     """One matmul site's accumulated power outcome (fJ, estimated full).
 
     ``designs`` maps design name -> ``{"total", "streaming", "h", "v"}``
-    (site energies and pipeline toggle counts). Twin-field accessors are
-    properties over the ``reference``/``primary`` entries.
+    (site energies and pipeline toggle counts); headline ratio accessors
+    are properties over the ``reference``/``primary`` entries.
     """
     name: str
     kind: str
@@ -62,23 +65,7 @@ class SitePower:
         ref = max(self.energy(self.reference, component), 1e-30)
         return 1.0 - self.energy(design, component) / ref
 
-    # ------------------------------------------------ legacy twin views
-    @property
-    def energy_base(self) -> float:
-        return self.energy(self.reference)
-
-    @property
-    def energy_prop(self) -> float:
-        return self.energy(self.primary)
-
-    @property
-    def energy_base_streaming(self) -> float:
-        return self.energy(self.reference, "streaming")
-
-    @property
-    def energy_prop_streaming(self) -> float:
-        return self.energy(self.primary, "streaming")
-
+    # ------------------------------------------- reference/primary views
     @property
     def saving_total(self) -> float:
         return self.saving(self.primary)
@@ -184,19 +171,15 @@ class TraceReport:
             s = dict(s)
             s["shape"] = tuple(s["shape"])
             if "designs" not in s:
-                # pre-design-API export: reconstruct the twin-design dict
-                # from the legacy flat fields (toggles were not stored;
-                # activity_reduction is preserved via the h/v ratio)
-                act = s.get("activity_reduction", 0.0)
-                s["designs"] = {
-                    "baseline": {"total": s["energy_base"],
-                                 "streaming": s["energy_base_streaming"],
-                                 "h": 1.0, "v": 0.0},
-                    "proposed": {"total": s["energy_prop"],
-                                 "streaming": s["energy_prop_streaming"],
-                                 "h": 1.0 - act, "v": 0.0},
-                }
-            for k in _DERIVED:
+                raise ValueError(
+                    f"site {s.get('name', '?')!r} has no 'designs' dict: "
+                    f"this JSON was exported before the design API (flat "
+                    f"energy_base/... fields) and can no longer be "
+                    f"loaded -- re-trace the model to produce a "
+                    f"design-keyed report")
+            for k in ("energy_base", "energy_prop",
+                      "energy_base_streaming", "energy_prop_streaming",
+                      *_DERIVED):
                 s.pop(k, None)
             sites.append(SitePower(**s))
         return cls(model=d["model"], geometry=tuple(d["geometry"]),
@@ -215,8 +198,7 @@ class TraceReport:
     def to_csv(self, path: str) -> None:
         cols = ("name", "kind", "calls", "B", "M", "K", "N", "macs",
                 "zero_fraction", "activity_reduction", "saving_total",
-                "saving_streaming", "streaming_share", "energy_base",
-                "energy_prop", "selected")
+                "saving_streaming", "streaming_share", "selected")
         design_cols = [f"energy_{d}" for d in self.designs]
         with open(path, "w") as f:
             f.write(",".join(cols + tuple(design_cols)) + "\n")
@@ -225,8 +207,7 @@ class TraceReport:
                 vals = (s.name, s.kind, s.calls, b, m, k, n, s.macs,
                         s.zero_fraction, s.activity_reduction,
                         s.saving_total, s.saving_streaming,
-                        s.streaming_share, s.energy_base, s.energy_prop,
-                        s.selected)
+                        s.streaming_share, s.selected)
                 vals += tuple(s.designs[d]["total"] if d in s.designs
                               else "" for d in self.designs)
                 f.write(",".join(str(v) for v in vals) + "\n")
@@ -240,7 +221,7 @@ class TraceReport:
         if with_sel:
             hdr += f" {'best':>9s} {'best%':>6s}"
         lines = [hdr, "-" * len(hdr)]
-        shown = sorted(self.sites, key=lambda s: -s.energy_base)
+        shown = sorted(self.sites, key=lambda s: -s.energy(s.reference))
         for s in shown[:max_rows]:
             b, m, k, n = s.shape
             name = s.name if len(s.name) <= 52 else "..." + s.name[-49:]

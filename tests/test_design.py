@@ -217,61 +217,17 @@ def test_stream_counters_design_keyed_and_compatible():
             np.testing.assert_allclose(e[name][comp], float(v), rtol=1e-6)
 
 
-def test_counters_to_energy_accepts_legacy_flat_keys():
-    legacy = {"eb_total": 10.0, "eb_streaming": 4.0,
-              "ep_total": 8.0, "ep_streaming": 2.0, "ep_overhead": 1.0}
-    e = monitor.counters_to_energy(legacy, scale=2.0)
-    assert e["baseline"]["total"] == 20.0
-    assert e["proposed"]["overhead"] == 2.0
-
-
-def test_counters_to_energy_legacy_round_trip():
-    """Round-trip a COMPLETE pre-design-API counter dict (the flat
-    ``eb_*``/``ep_*`` keys PR 2's stream_counters emitted, plus its
-    bookkeeping keys) and pin the pre-design-API contract: the known
-    component sets come back complete -- absent counters as zeros, never
-    missing keys -- because downstream consumers
-    (``power.aggregate_savings``, report accessors) index components
-    unconditionally."""
-    legacy = {f"eb_{c}": 10.0 * i
-              for i, c in enumerate(monitor.BASE_COMPONENTS, 1)}
-    legacy.update({f"ep_{c}": 5.0 * i
-                   for i, c in enumerate(monitor.PROP_COMPONENTS, 1)})
-    legacy.update({"h_base": 7.0, "h_prop": 3.0, "v_base": 6.0,
-                   "v_prop": 2.0, "cycles": 100.0, "zero_fraction": 0.5})
-    e = monitor.counters_to_energy(legacy, scale=2.0)
-    assert set(e) == {"baseline", "proposed"}
-    # complete component sets, values scaled
-    assert set(e["baseline"]) == set(monitor.BASE_COMPONENTS)
-    assert set(e["proposed"]) == set(monitor.PROP_COMPONENTS)
-    for i, c in enumerate(monitor.BASE_COMPONENTS, 1):
-        assert e["baseline"][c] == 20.0 * i
-    for i, c in enumerate(monitor.PROP_COMPONENTS, 1):
-        assert e["proposed"][c] == 10.0 * i
-    # ...and the round-trip aggregates like a power.sa_power twin dict
-    agg = power.aggregate_savings([e])
-    assert agg["total_saving"] == pytest.approx(0.5)
-    # toggles ride the same dict through counters_toggles
-    t = monitor.counters_toggles(legacy, scale=2.0)
-    assert t == {"baseline": {"h": 14.0, "v": 12.0},
-                 "proposed": {"h": 6.0, "v": 4.0}}
-
-
-def test_counters_to_energy_partial_legacy_zero_fills():
-    """The repaired divergence: a PARTIAL legacy dict (e.g. a request
-    retired before any proposed-side counters were booked, or an old
-    JSON export truncated to the totals) must yield zero-filled
-    components exactly like the pre-design-API implementation did --
-    not a dict whose missing keys KeyError in every accessor."""
-    e = monitor.counters_to_energy({"eb_total": 4.0, "eb_streaming": 1.0})
-    assert e["baseline"]["total"] == 4.0
-    assert e["baseline"]["clock"] == 0.0          # zero-filled, present
-    assert e["proposed"]["total"] == 0.0          # whole design filled
-    assert set(e["proposed"]) == set(monitor.PROP_COMPONENTS)
-    # an accessor pattern every report uses must not raise
-    assert (1.0 - e["proposed"]["total"] / max(e["baseline"]["total"],
-                                               1e-30)) == 1.0
-    # design-namespaced (modern) dicts are NOT padded with twin designs
+def test_counters_to_energy_rejects_legacy_flat_keys():
+    """The pre-design-API flat ``eb_*``/``ep_*`` counters (and the
+    ``h_base``/``v_prop`` toggle keys) are no longer silently coerced
+    into twin designs -- they fail loudly with a pointer at the design
+    API, so stale pickled counter dicts can't masquerade as re-traced
+    numbers."""
+    with pytest.raises(ValueError, match="eb_.*no longer supported"):
+        monitor.counters_to_energy({"eb_total": 10.0, "ep_total": 8.0})
+    with pytest.raises(ValueError, match="legacy pre-design-API toggle"):
+        monitor.counters_toggles({"h_base": 7.0, "v_base": 6.0})
+    # design-namespaced (modern) dicts still pass straight through
     modern = monitor.counters_to_energy({"e/custom/total": 3.0})
     assert set(modern) == {"custom"}
     assert modern["custom"] == {"total": 3.0}
@@ -434,9 +390,11 @@ def test_accountant_finish_without_records_is_well_formed():
     assert r.streaming_share == 0.0
 
 
-def test_trace_report_loads_pre_design_api_json():
+def test_trace_report_rejects_pre_design_api_json():
     """JSON exports written before the design API (sites with flat
-    energy_base/... fields, no 'designs' dict) must still load."""
+    energy_base/... fields, no 'designs' dict) must fail to load with a
+    clear error telling the user to re-trace, not deserialize into a
+    report whose accessors silently lie."""
     from repro.trace import TraceReport
 
     old = {
@@ -451,14 +409,8 @@ def test_trace_report_loads_pre_design_api_json():
             "energy_prop": 90.0, "energy_base_streaming": 30.0,
             "energy_prop_streaming": 24.0}],
     }
-    rep = TraceReport.from_json_dict(old)
-    (site,) = rep.sites
-    assert rep.designs == ("baseline", "proposed")
-    assert site.energy_base == 100.0 and site.energy_prop == 90.0
-    assert site.saving_total == pytest.approx(0.1)
-    assert site.saving_streaming == pytest.approx(0.2)
-    assert site.activity_reduction == pytest.approx(0.25)
-    assert rep.aggregate()["total_saving"] == pytest.approx(0.1)
+    with pytest.raises(ValueError, match="'l0'.*before the design API"):
+        TraceReport.from_json_dict(old)
 
 
 def test_selection_equals_fixed_when_only_pair_traced():

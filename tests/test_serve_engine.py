@@ -224,10 +224,10 @@ def test_request_energies_sum_to_serve_wide_report(model):
     base = sum(r.power.energy["baseline"]["total"] for r in finished)
     prop = sum(r.power.energy["proposed"]["total"] for r in finished)
     rep = eng.trace_report()
-    np.testing.assert_allclose(sum(s.energy_base for s in rep.sites),
-                               base, rtol=1e-6)
-    np.testing.assert_allclose(sum(s.energy_prop for s in rep.sites),
-                               prop, rtol=1e-6)
+    np.testing.assert_allclose(
+        sum(s.energy("baseline") for s in rep.sites), base, rtol=1e-6)
+    np.testing.assert_allclose(
+        sum(s.energy("proposed") for s in rep.sites), prop, rtol=1e-6)
     agg = rep.aggregate()
     np.testing.assert_allclose(agg["total_saving"], 1.0 - prop / base,
                                rtol=1e-6)
@@ -247,7 +247,7 @@ def test_power_sample_every_extrapolates(model):
     # views are frozen from the same extrapolated per-request counters)
     rep = eng.trace_report()
     np.testing.assert_allclose(
-        sum(s.energy_base for s in rep.sites),
+        sum(s.energy("baseline") for s in rep.sites),
         sum(q.power.energy["baseline"]["total"] for q in finished),
         rtol=1e-6)
 

@@ -1,4 +1,4 @@
-"""Property/fuzz tests: FIFOScheduler + SlotCache under random churn.
+"""Property/fuzz tests: schedulers + slot/page pools under random churn.
 
 The scheduler's promises, fuzzed over randomized submit / admit /
 decode / cancel / retire interleavings (via the hypothesis shim -- the
@@ -15,16 +15,32 @@ properties run with or without hypothesis installed):
   * freed slots are immediately reusable, always lowest-index-first,
     and the pool never leaks (n_free + n_live == max_slots throughout).
 
-No model runs here: the scheduler and the slot allocator are host-side
-control flow, which is exactly why the sharded engine can reuse them
-unchanged (tests/multidevice pins that equivalence end to end).
+The paged counterparts (repro.serve.paging) extend the same contract:
+
+  * ClassScheduler is strictly prioritized across classes, FIFO within
+    a class, and deficit-round-robin fair (proportional to weights)
+    among equal-priority backlogs; ``requeue_front`` re-admits a
+    preempted request before any later arrival of its class;
+  * the page pool never over-commits (all-or-nothing allocation, a
+    closed count of allocatable pages, the trash page never handed out)
+    and never leaks across allocate/release/cancel churn;
+  * preemption + resume is invisible in the token stream: a run under
+    page pressure produces exactly the tokens of an uncontended run;
+  * cancelling requests -- queued, running, or mid-churn -- returns
+    every page to the pool.
+
+Host-side properties run with no model; the two engine-level properties
+at the bottom run a real smoke model with few examples (every drawn
+example compiles fresh jits).
 """
 import numpy as np
 import pytest
 
 from _hypothesis_compat import given, settings, st
-from repro.serve import FIFOScheduler, Request
+from repro.serve import (ClassScheduler, FIFOScheduler, PagingConfig,
+                         Request, SchedClass, ServeConfig, ServeEngine)
 from repro.serve.cache import SlotCache
+from repro.serve.paging.cache import TRASH, PagedKVCache
 
 
 # ------------------------------------------------------------ scheduler
@@ -147,3 +163,193 @@ def test_slot_pool_reuse_under_random_churn(ops, max_slots):
         cache.release(live[0])
         with pytest.raises(RuntimeError):
             cache.release(live[0])
+
+
+# ----------------------------------------------------- class scheduler
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2),       # priority
+                          st.integers(1, 4),       # weight
+                          st.integers(2, 8)),      # queued requests
+                min_size=2, max_size=4),
+       st.integers(0, 2 ** 16))
+def test_class_scheduler_priority_and_drr_fairness(classes, seed):
+    """Strict priority across classes, FIFO within a class, and DRR
+    shares proportional to weights among an equal-priority backlog."""
+    scheds = [SchedClass(f"c{i}", priority=p, weight=w)
+              for i, (p, w, _) in enumerate(classes)]
+    sched = ClassScheduler(64, tuple(scheds))
+    rng = np.random.default_rng(seed)
+    remaining = {c.name: n for c, (_, _, n) in zip(scheds, classes)}
+    order = [c.name for c, (_, _, n) in zip(scheds, classes)
+             for _ in range(n)]
+    rng.shuffle(order)
+    by_class = {c.name: [] for c in scheds}
+    for name in order:
+        by_class[name].append(
+            sched.submit(Request(prompt=[1], max_new_tokens=1,
+                                 klass=name)).uid)
+
+    prio = {c.name: c.priority for c in scheds}
+    weight = {c.name: c.weight for c in scheds}
+    pops = []
+    while sched.n_pending:
+        top = max(prio[n] for n, k in remaining.items() if k)
+        (req,) = sched.pop_admissible(1)
+        # strict priority: never admits below the best backlogged tier
+        assert prio[req.klass] == top, (req.klass, remaining)
+        # FIFO within the class
+        assert req.uid == by_class[req.klass].pop(0)
+        remaining[req.klass] -= 1
+        pops.append(req.klass)
+
+    # DRR fairness over the window where the WHOLE top tier (classes at
+    # the globally highest priority) stayed backlogged: normalized
+    # shares (count / weight) differ by at most one full DRR round
+    top_p = max(prio.values())
+    tier = [n for n in prio if prio[n] == top_p]
+    window = min(sum(1 for n in pops if n == t) for t in tier)
+    counts = {t: 0 for t in tier}
+    seen = 0
+    for name in pops:
+        if name in tier:
+            counts[name] += 1
+            seen += 1
+            if counts[name] == window and seen >= len(tier):
+                break
+    if window >= 2:
+        shares = [counts[t] / weight[t] for t in tier]
+        assert max(shares) - min(shares) <= 2.0, (counts, weight)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_requeue_front_outranks_class_arrivals(seed):
+    """A preempted request re-queued at the front is the next admission
+    of ITS class, ahead of every earlier-queued classmate."""
+    rng = np.random.default_rng(seed)
+    sched = ClassScheduler(64, (SchedClass("a", weight=2),
+                                SchedClass("b")))
+    reqs = [sched.submit(Request(prompt=[1], max_new_tokens=1,
+                                 klass=rng.choice(["a", "b"])))
+            for _ in range(8)]
+    (victim,) = sched.pop_admissible(1)
+    sched.requeue_front(victim)
+    readmitted = None
+    while sched.n_pending:
+        (req,) = sched.pop_admissible(1)
+        if req.klass == victim.klass:
+            readmitted = req
+            break
+    assert readmitted is not None and readmitted.uid == victim.uid
+
+
+# -------------------------------------------------------- page pool
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),           # alloc vs release
+                          st.integers(1, 3)),      # pages wanted
+                min_size=1, max_size=50),
+       st.integers(5, 12),                         # num_pages
+       st.integers(1, 4))                          # max_rows
+def test_page_pool_never_overcommits_or_leaks(ops, num_pages, max_rows):
+    """Random row/page churn: the allocatable pool is a closed count,
+    allocation is all-or-nothing, the trash page is never handed out,
+    and double frees are refused."""
+    from repro.configs import SMOKES
+    cfg = SMOKES["qwen1.5-0.5b"].with_(compute_dtype="float32")
+    cache = PagedKVCache(cfg, max_rows, cache_len=16, page_size=4,
+                         num_pages=num_pages)
+    owned: dict[int, list[int]] = {}
+    rng = np.random.default_rng(num_pages * 31 + max_rows)
+    for want_alloc, k in ops:
+        in_flight = sum(len(v) for v in owned.values())
+        assert cache.n_free_pages + in_flight == num_pages - 1
+        if want_alloc and cache.n_free:
+            k = min(k, 16 // 4)                    # table capacity
+            if cache.n_free_pages < k:
+                with pytest.raises(RuntimeError, match="pages"):
+                    cache.allocate_pages(k)
+                continue
+            row = cache.allocate()
+            pages = cache.allocate_pages(k)
+            assert TRASH not in pages
+            assert len(set(pages)) == k
+            cache.set_table(row, pages, 0)
+            owned[row] = pages
+        elif owned:
+            row = int(rng.choice(list(owned)))
+            got, shared = cache.release(row)
+            assert got == owned.pop(row) and not shared
+            cache.free_pages(got)
+            with pytest.raises(RuntimeError, match="free"):
+                cache.free_pages([got[0]])
+    assert cache.n_free_pages + sum(len(v) for v in owned.values()) \
+        == num_pages - 1
+
+
+# ------------------------------------------- engine-level (real model)
+_MODEL = None
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        import jax
+        from repro.configs import SMOKES
+        from repro.models import lm
+        cfg = SMOKES["qwen1.5-0.5b"].with_(compute_dtype="float32")
+        _MODEL = (cfg, lm.init_model(jax.random.key(0), cfg))
+    return _MODEL
+
+
+def _paged_engine(pages, rows=3, classes=()):
+    cfg, params = _model()
+    return ServeEngine(params, cfg, ServeConfig(
+        cache_len=48, paging=PagingConfig(
+            page_size=8, num_pages=pages, max_rows=rows,
+            classes=classes)))
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(7, 9),                          # tight pool size
+       st.integers(0, 2 ** 16))
+def test_preemption_then_resume_token_equivalence(pages, seed):
+    """Fuzzed page pressure: runs that preempt and resume produce
+    exactly the tokens of an uncontended ample-pool run."""
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(0, 256, int(rng.integers(10, 15)))))
+               for _ in range(3)]
+    mn = [int(rng.integers(4, 9)) for _ in prompts]
+
+    def run(n_pages):
+        eng = _paged_engine(n_pages)
+        for p, m in zip(prompts, mn):
+            eng.submit(p, max_new_tokens=m)
+        out = {r.uid: r.generated for r in eng.run()}
+        assert eng.cache.n_free_pages == n_pages - 1
+        return out, eng.stats["preemptions"]
+
+    ample, p0 = run(24)
+    tight, _ = run(pages)
+    assert p0 == 0
+    assert tight == ample
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_cancel_frees_all_pages_under_churn(seed):
+    """Cancel queued + running requests at random points; the pool must
+    drain back to every allocatable page free."""
+    rng = np.random.default_rng(seed)
+    eng = _paged_engine(16, rows=2)
+    prompts = [list(map(int, rng.integers(0, 256, int(rng.integers(4, 20)))))
+               for _ in range(5)]
+    reqs = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    cancel = rng.choice(len(reqs), size=2, replace=False)
+    eng.step()
+    for i in cancel:
+        eng.cancel(reqs[i].uid)
+    eng.run()
+    assert eng.cache.n_live == 0 and eng.cache.n_free == 2
+    assert eng.cache.n_free_pages == 16 - 1
+    for i in cancel:
+        assert reqs[i].done

@@ -150,10 +150,10 @@ def test_traced_counters_match_direct_stream_report():
         direct.append(power.sa_power(r))
     by_order = sorted(rep.sites, key=lambda s: s.name)
     for site, pw in zip(by_order, direct):
-        np.testing.assert_allclose(site.energy_base,
+        np.testing.assert_allclose(site.energy("baseline"),
                                    float(pw["baseline"]["total"]),
                                    rtol=1e-5)
-        np.testing.assert_allclose(site.energy_prop,
+        np.testing.assert_allclose(site.energy("proposed"),
                                    float(pw["proposed"]["total"]),
                                    rtol=1e-5)
         np.testing.assert_allclose(site.saving_total,
@@ -180,8 +180,8 @@ def test_call_accumulation_and_extrapolation():
     assert site.sampled_calls == 2
     # energy extrapolates over unsampled calls: ~5/2 x the 2-call sum
     one = trace_calls(fn, xs[:2], name="rep", cfg=cfg).sites[0]
-    np.testing.assert_allclose(site.energy_base, one.energy_base * 2.5,
-                               rtol=1e-6)
+    np.testing.assert_allclose(site.energy(site.reference),
+                               one.energy(one.reference) * 2.5, rtol=1e-6)
 
 
 # ------------------------------------------------------------- LM tracing
@@ -220,7 +220,8 @@ def test_json_roundtrip(tmp_path):
     assert len(back.sites) == len(rep.sites)
     for a, b in zip(rep.sites, back.sites):
         assert a.name == b.name and a.shape == b.shape
-        np.testing.assert_allclose(a.energy_base, b.energy_base)
+        np.testing.assert_allclose(a.energy(a.reference),
+                                   b.energy(b.reference))
     for k, v in rep.summary().items():
         got = back.summary()[k]
         if isinstance(v, float):
