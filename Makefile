@@ -4,8 +4,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test kernel-test multidevice-test trace-smoke serve-smoke \
-	design-smoke paging-smoke bench-quick ci
+.PHONY: test kernel-test kernels-test multidevice-test trace-smoke \
+	serve-smoke design-smoke paging-smoke kernels-smoke bench-quick ci
 
 # tier-1: the whole test suite, fail fast, with the 15 slowest tests
 # reported so suite-runtime regressions are visible in every CI log
@@ -18,6 +18,15 @@ kernel-test:
 	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q --durations=15 \
 	    tests/test_kernels.py tests/test_power_counter_kernels.py \
 	    tests/test_hypothesis_shim.py
+
+# the full kernel-equivalence tier: kernel-test plus the fused decode
+# matmul/counter/paged-attention differentials and the end-to-end
+# ServeConfig(kernel_backend=...) bit-identity suite (docs/testing.md)
+kernels-test:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -x -q --durations=15 \
+	    tests/test_kernels.py tests/test_power_counter_kernels.py \
+	    tests/test_hypothesis_shim.py tests/test_zvg_matmul_kernels.py \
+	    tests/test_serve_kernel_backend.py
 
 # tier-2 multi-device suite: mesh-sharded serving bit-exactness +
 # sharding-rule resolution, on 8 virtual CPU devices (the XLA flag must
@@ -49,6 +58,11 @@ design-smoke:
 # writing the structured-JSON CI artifact
 paging-smoke:
 	$(PY) -m benchmarks.serve_paging --quick --emit-json BENCH_serve.json
+
+# end-to-end smoke of the fused decode kernels: serving overhead fused
+# vs unfused, zero-density sweep, writing the structured-JSON CI artifact
+kernels-smoke:
+	$(PY) -m benchmarks.serve_kernels --quick --emit-json BENCH_kernels.json
 
 bench-quick: trace-smoke
 	$(PY) -m benchmarks.serve_throughput --quick

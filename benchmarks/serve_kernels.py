@@ -1,0 +1,179 @@
+"""Fused decode-kernel benchmark: serving overhead, fused vs unfused.
+
+The question the PR-7 kernels answer: what does MONITORED serving cost
+when one fused Pallas pass produces the decode products AND the whole
+coding-menu counter set, versus the unfused reference (stock XLA matmul
++ separate counter passes)? Cells:
+
+* ``serve_<backend>[_power]`` -- the same mixed workload through
+  ``ServeEngine`` with ``kernel_backend`` ref / pallas, monitoring off
+  and on; the derived column reports tok/s and the monitored-serving
+  overhead %% per backend. Greedy tokens must be bit-identical across
+  all four runs (the kernel-equivalence contract) -- a mismatch fails
+  the run.
+* ``gated_matmul_zf*`` -- the ZVG row matmul across a zero-density
+  sweep on decode-shaped operands, against stock ``x @ w``.
+* ``fused_counter_pass`` -- the one-pass monitored matmul
+  (``_fused_decode_counters``) vs the reference counter producer,
+  with a CONFIRMED/REFUTED verdict on integer-counter equality.
+
+On this CPU container the Pallas kernels run in interpret mode, so
+absolute kernel wall-clock is NOT the hardware story (interpret mode
+evaluates the kernel body op-by-op); the numbers that transfer are the
+overhead ratios and the pass-count structure. ``--emit-json
+BENCH_kernels.json`` writes every cell as structured JSON (the CI
+artifact uploaded beside ``BENCH_serve.json``).
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_kernels [--quick]
+      [--emit-json BENCH_kernels.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SMOKES
+from repro.models import lm
+from repro.serve import ServeConfig, ServeEngine
+
+from .common import row, timed
+
+ARCH = "qwen1.5-0.5b"
+CACHE_LEN = 64
+MAX_NEW = 8
+N_REQUESTS = 12
+
+
+def _workload(cfg, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [list(rng.integers(0, cfg.vocab, int(rng.integers(2, 24))))
+            for _ in range(N_REQUESTS)]
+
+
+def _serve(params, cfg, prompts, backend: str, power: bool):
+    engine = ServeEngine(params, cfg, ServeConfig(
+        max_slots=4, cache_len=CACHE_LEN, power_monitor=power,
+        kernel_backend=backend))
+    for p in prompts:
+        engine.submit(p, max_new_tokens=MAX_NEW)
+    t0 = time.perf_counter()
+    finished = engine.run()
+    dt = time.perf_counter() - t0
+    return engine, {r.uid: r.generated for r in finished}, dt
+
+
+def main(quick: bool = False, emit_json: str | None = None) -> None:
+    cfg = SMOKES[ARCH].with_(compute_dtype="float32")
+    params = lm.init_model(jax.random.key(0), cfg)
+    prompts = _workload(cfg)
+    results: dict[str, dict] = {}
+
+    # ---- serving cells: tok/s and monitored overhead per backend
+    tokens_ref = None
+    for backend in ("ref", "pallas"):
+        _serve(params, cfg, prompts, backend, False)     # compile warm-up
+        cell = {}
+        dts = {}
+        for power in (False, True):
+            if power:
+                _serve(params, cfg, prompts, backend, True)   # warm-up
+            engine, toks, dt = _serve(params, cfg, prompts, backend, power)
+            st = engine.stats
+            dts[power] = dt
+            name = f"serve_{backend}" + ("_power" if power else "")
+            tag = "monitored" if power else "unmonitored"
+            row(name, dt / max(st["decode_steps"], 1) * 1e6,
+                f"{st['tokens'] / dt:.0f} tok/s {tag} "
+                f"(kernel_backend={backend})")
+            cell[tag] = {"tokens_per_s": st["tokens"] / dt, "wall_s": dt,
+                         "decode_steps": st["decode_steps"]}
+            if tokens_ref is None:
+                tokens_ref = toks
+            elif toks != tokens_ref:
+                raise SystemExit(
+                    f"greedy tokens changed under backend={backend} "
+                    f"power={power} (kernel-equivalence violated)")
+        overhead = (dts[True] - dts[False]) / dts[False] * 100
+        cell["monitor_overhead_pct"] = overhead
+        print(f"# {backend}: monitored-serving overhead "
+              f"{overhead:+.0f}% wall vs monitoring off")
+        results[f"serve_{backend}"] = cell
+    fused, unfused = (results["serve_pallas"]["monitor_overhead_pct"],
+                      results["serve_ref"]["monitor_overhead_pct"])
+    print(f"# monitored-serving overhead: fused {fused:+.0f}% vs "
+          f"unfused {unfused:+.0f}%")
+
+    # ---- zero-density sweep: the ZVG row matmul on decode-shaped rows
+    from repro.kernels.zvg_matmul.fused import gated_row_matmul
+    b, k, n = 8, 512, 512
+    rng = np.random.default_rng(11)
+    sweep = {}
+    zfs = (0.0, 0.9) if quick else (0.0, 0.5, 0.9, 1.0)
+    for zf in zfs:
+        x = (rng.standard_normal((b, k)) * 0.5).astype(np.float32)
+        mask = rng.random(b) < zf                 # whole-row sparsity:
+        x[mask] = 0.0                             # the granularity ZVG gates
+        x, w = jnp.asarray(x), jnp.asarray(
+            (rng.standard_normal((k, n)) * 0.05).astype(np.float32))
+        _, us_ref = timed(lambda: jax.block_until_ready(x @ w))
+        _, us_pal = timed(lambda: jax.block_until_ready(
+            gated_row_matmul(x, w)))
+        gated = int(mask.sum())
+        row(f"gated_matmul_zf{int(zf * 100):02d}", us_pal,
+            f"{gated}/{b} rows gated / xla {us_ref:.0f}us "
+            f"(interpret mode)")
+        sweep[f"zf{int(zf * 100):02d}"] = {
+            "rows_gated": gated, "rows": b,
+            "pallas_us": us_pal, "xla_us": us_ref}
+    results["zero_sweep"] = sweep
+
+    # ---- the monitored pass itself: one fused kernel vs the reference
+    from repro.core.monitor import DEFAULT_MONITOR
+    from repro.serve.power import (_fused_decode_counters,
+                                   _ref_decode_counters)
+    x = (rng.standard_normal((4, 896)) * 0.5).astype(np.float32)
+    x[rng.random(x.shape) < 0.4] = 0.0
+    x = jnp.asarray(x)
+    w = jnp.asarray((rng.standard_normal((896, 512)) * 0.05)
+                    .astype(np.float32))
+    ref_out, us_ref = timed(lambda: jax.block_until_ready(
+        _ref_decode_counters(x, w, DEFAULT_MONITOR)))
+    fused_out, us_pal = timed(lambda: jax.block_until_ready(
+        _fused_decode_counters(x, w, DEFAULT_MONITOR)))
+    equal = all(
+        np.asarray(jax.device_get(g)).tobytes()
+        == np.asarray(jax.device_get(r)).tobytes()
+        for g, r in zip(fused_out[:4], ref_out))
+    verdict = "CONFIRMED" if equal else "REFUTED"
+    row("fused_counter_pass", us_pal,
+        f"products+counters one pass / ref producer {us_ref:.0f}us / "
+        f"integer equality {verdict}")
+    results["fused_counter_pass"] = {
+        "fused_us": us_pal, "ref_us": us_ref, "counters_bit_equal": equal}
+    if not equal:
+        raise SystemExit(
+            "fused counter pass diverged from the reference producer")
+
+    if emit_json:
+        with open(emit_json, "w") as f:
+            json.dump({"arch": ARCH, "cache_len": CACHE_LEN,
+                       "quick": quick, "cells": results},
+                      f, indent=1, default=float)
+        print(f"# wrote {emit_json}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="trim the zero-density grid (CI smoke)")
+    ap.add_argument("--emit-json", default=None, metavar="PATH",
+                    help="also write every cell as structured JSON "
+                         "(e.g. BENCH_kernels.json, the CI artifact)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick, emit_json=args.emit_json)

@@ -46,9 +46,11 @@ def _workload(cfg, seed: int = 0):
             for _ in range(N_REQUESTS)]
 
 
-def _serve(params, cfg, prompts, slots: int, power: bool, mesh=None):
+def _serve(params, cfg, prompts, slots: int, power: bool, mesh=None,
+           backend: str = "ref"):
     engine = ServeEngine(params, cfg, ServeConfig(
-        max_slots=slots, cache_len=CACHE_LEN, power_monitor=power),
+        max_slots=slots, cache_len=CACHE_LEN, power_monitor=power,
+        kernel_backend=backend),
         mesh=mesh)
     for p in prompts:
         engine.submit(p, max_new_tokens=MAX_NEW)
@@ -123,6 +125,27 @@ def main(quick: bool = False, mesh_spec: str | None = None) -> None:
         raise SystemExit(
             "paged greedy outputs differ from the slot engine "
             "(paging bit-exactness violated)")
+
+    # fused-kernel cell: the same workload with the decode matmuls +
+    # counter pass routed through the fused Pallas kernels -- tokens
+    # must stay bit-identical to the stock-XLA cells (the kernel-
+    # equivalence contract; benchmarks.serve_kernels has the full
+    # overhead/zero-density story behind BENCH_kernels.json)
+    _serve(params, cfg, prompts, slots, power=True,
+           backend="pallas")                        # fused compile warm-up
+    engine, finished, dt = _serve(params, cfg, prompts, slots, power=True,
+                                  backend="pallas")
+    toks = {r.uid: r.generated for r in finished}
+    agg = engine.trace_report().summary()
+    row(f"serve_b{slots}_pallas",
+        dt / max(engine.stats["decode_steps"], 1) * 1e6,
+        f"{engine.stats['tokens'] / dt:.0f} tok/s fused kernels / "
+        f"{agg['total_saving'] * 100:.2f}% total saving "
+        f"(same tokens: {toks == tokens_ref})")
+    if toks != tokens_ref:
+        raise SystemExit(
+            "fused-kernel greedy outputs differ from the ref backend "
+            "(kernel-equivalence violated)")
 
     if mesh_spec:
         mesh = _parse_mesh(mesh_spec)

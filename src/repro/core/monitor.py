@@ -207,13 +207,21 @@ def stream_counters(A: jax.Array, W: jax.Array,
     stays consistent with whole-call tracing.
     """
     ev = _evaluate_operands(A, W, cfg.design_list, cfg.backend)
+    return flatten_evaluated(ev, cfg.design_names)
+
+
+def flatten_evaluated(ev: dict, design_names: tuple[str, ...]) -> dict:
+    """Flatten an ``evaluate_operands`` result to the scalar-counter dict
+    contract of :func:`stream_counters`. Shared with the fused serve
+    decode path (:func:`repro.serve.power._fused_rows_counters`), so
+    both backends emit byte-identical key sets via the same ops."""
     flat = {}
     for name, r in ev.items():
         for comp, v in r["energy"].items():
             flat[f"e/{name}/{comp}"] = v
         flat[f"h/{name}"] = r["h"]
         flat[f"v/{name}"] = r["v"]
-    first = ev[cfg.design_names[0]]
+    first = ev[design_names[0]]
     flat["cycles"] = first["cycles"]
     flat["zero_fraction"] = first["zero_fraction"]
     return flat

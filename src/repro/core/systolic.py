@@ -58,32 +58,24 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
 seg_key = bic.seg_key
 
 
-def _edge_menu(bits: jax.Array, prefix: str,
-               bic_variants: tuple[tuple[int, ...], ...],
-               with_zvg: bool, backend: str | None,
-               interpret: bool | None):
-    """Coding menu for one edge's ``uint16[T, lanes]`` stream.
+def menu_lane_sums(rows: dict, prefix: str,
+                   bic_variants: tuple[tuple[int, ...], ...],
+                   with_zvg: bool) -> dict:
+    """Sum one edge's per-lane counter rows to the f32 menu scalars.
 
-    ONE fused counter pass (:func:`repro.kernels.power_counters.
-    edge_counters` -- the Pallas kernel or its pure-JAX reference,
-    selected by ``backend``) tabulates every per-lane counter; this
-    shim sums lanes to the f32 scalars the menu stores: raw and
-    mantissa-field transition counts, one BIC transition count per
-    requested segment variant (encoded-data + invert-line toggles), and
-    -- when ``with_zvg`` -- the zero-held (gated) variants of all of the
-    above plus the is-zero-line toggles. These are the coding-agnostic
-    primitives :func:`repro.design.evaluate.design_energy` prices any
-    :class:`~repro.design.DesignPoint` from.
-
-    Returns ``(menu dict, per-cycle zero counts int32[T])``.
+    ``rows`` is the per-lane counter table of one stream (keyed by
+    :attr:`repro.kernels.power_counters.spec.CounterSpec.rows`); the
+    result holds raw and mantissa-field transition counts, one BIC
+    transition count per requested segment variant (encoded-data +
+    invert-line toggles), and -- when ``with_zvg`` -- the zero-held
+    (gated) variants of all of the above plus the is-zero-line toggles.
+    These are the coding-agnostic primitives
+    :func:`repro.design.evaluate.design_energy` prices any
+    :class:`~repro.design.DesignPoint` from. Shared by the whole-stream
+    report below and the fused serve decode kernel
+    (:mod:`repro.kernels.zvg_matmul.fused`), so both paths assemble
+    menus with identical ops.
     """
-    # repro.kernels imports repro.core (bits/bic/zvg), so this import
-    # must be lazy to keep both package import orders working.
-    from repro.kernels import power_counters as pc
-
-    spec = pc.CounterSpec(bic_variants=bic_variants, zvg=with_zvg)
-    rows = pc.edge_counters(bits, spec, backend=backend,
-                            interpret=interpret)
     f32 = lambda v: jnp.asarray(v, jnp.float32)
     out = {}
     out[f"{prefix}_raw"] = f32(rows["raw"]).sum()
@@ -99,7 +91,79 @@ def _edge_menu(bits: jax.Array, prefix: str,
         if with_zvg:
             out[f"{prefix}_bic_zvg/{k}"] = f32(
                 rows[f"bic_zvg/{k}/data"] + rows[f"bic_zvg/{k}/inv"]).sum()
+    return out
+
+
+def _edge_menu(bits: jax.Array, prefix: str,
+               bic_variants: tuple[tuple[int, ...], ...],
+               with_zvg: bool, backend: str | None,
+               interpret: bool | None):
+    """Coding menu for one edge's ``uint16[T, lanes]`` stream.
+
+    ONE fused counter pass (:func:`repro.kernels.power_counters.
+    edge_counters` -- the Pallas kernel or its pure-JAX reference,
+    selected by ``backend``) tabulates every per-lane counter;
+    :func:`menu_lane_sums` then sums lanes to the f32 scalars the menu
+    stores. Returns ``(menu dict, per-cycle zero counts int32[T])``.
+    """
+    # repro.kernels imports repro.core (bits/bic/zvg), so this import
+    # must be lazy to keep both package import orders working.
+    from repro.kernels import power_counters as pc
+
+    spec = pc.CounterSpec(bic_variants=bic_variants, zvg=with_zvg)
+    rows = pc.edge_counters(bits, spec, backend=backend,
+                            interpret=interpret)
+    out = menu_lane_sums(rows, prefix, bic_variants, with_zvg)
     return out, rows["rowzeros"]
+
+
+def stream_facts(geom: SAGeometry, M: int, K: int, N: int,
+                 az_rows: jax.Array, nz_rows: jax.Array) -> dict:
+    """Coding-independent facts of one tiled ``[M,K] x [K,N]`` matmul.
+
+    ``az_rows`` / ``nz_rows`` are the per-cycle zero-word counts of the
+    (padded) West and North streams (``int32[K]``). The menu-side twin
+    of :func:`menu_lane_sums`: the whole-stream report and the fused
+    serve decode kernel both derive the tile/slot/zero statistics here,
+    with identical ops.
+    """
+    R, C = geom.rows, geom.cols
+    Mp, Np = M + (-M) % R, N + (-N) % C
+    Tm, Tn = Mp // R, Np // C
+    f32 = lambda v: jnp.asarray(v, jnp.float32)
+
+    zeros = f32(az_rows.sum())     # zero input lane-cycles
+    zeros_n = f32(nz_rows.sum())   # zero weight lane-cycles
+    # exact count of MAC slots where BOTH operands are zero (needed when a
+    # design gates both edges; inclusion-exclusion on the gated slots)
+    overlap = (f32(az_rows) * f32(nz_rows)).sum()
+
+    pe_slots = f32(Mp) * Np * K                  # total MAC slots
+    active_frac = 1.0 - zeros / (f32(Mp) * K)    # mean input-active fraction
+    # acc register only toggles when the product is non-zero (true for the
+    # baseline too: acc + 0 leaves the register unchanged)
+    nonzero_slots = pe_slots - f32(Np) * zeros
+
+    fill = R + C - 2
+    cycles = f32(Tm) * Tn * (K + fill)
+    unload_trav = f32(Tm) * Tn * C * R * (R + 1) / 2.0     # 32b result shifts
+
+    return {
+        "M": f32(M), "K": f32(K), "N": f32(N),
+        "Mp": f32(Mp), "Np": f32(Np), "Tm": f32(Tm), "Tn": f32(Tn),
+        "rows": f32(R), "cols": f32(C),
+        "cycles": cycles,
+        "pe_slots": pe_slots,
+        "nonzero_slots": nonzero_slots,
+        "active_frac": active_frac,
+        "w_zeros": zeros,
+        "n_zeros": zeros_n,
+        "gated_overlap": overlap,
+        "zero_fraction": zeros / (f32(Mp) * K),
+        "unload_reg_traversals": unload_trav,
+        "west_words": f32(Tn) * Mp * K,    # West-edge words (zdet checks)
+        "north_words": f32(Tm) * Np * K,   # North-edge words (BIC encodes)
+    }
 
 
 @partial(jax.jit, static_argnames=("geom", "west_bic", "north_bic",
@@ -150,9 +214,6 @@ def sa_design_report(A: jax.Array, Bm: jax.Array,
 
     Ap = _pad_to(A, R, 0)          # [M', K]
     Bp = _pad_to(Bm, C, 1)         # [K, N']
-    Mp, Np = Ap.shape[0], Bp.shape[1]
-    Tm, Tn = Mp // R, Np // C
-    f32 = lambda v: jnp.asarray(v, jnp.float32)
 
     a_bits = activity.matrix_stream_bits(Ap, axis=1)       # [K, M']
     b_bits = activity.matrix_stream_bits(Bp, axis=0)       # [K, N']
@@ -161,40 +222,7 @@ def sa_design_report(A: jax.Array, Bm: jax.Array,
     n_menu, nz_rows = _edge_menu(b_bits, "n", tuple(north_bic), north_zvg,
                                  backend, interpret)
     out.update(n_menu)
-
-    # --- coding-independent facts ----------------------------------------
-    zeros = f32(az_rows.sum())     # zero input lane-cycles
-    zeros_n = f32(nz_rows.sum())   # zero weight lane-cycles
-    # exact count of MAC slots where BOTH operands are zero (needed when a
-    # design gates both edges; inclusion-exclusion on the gated slots)
-    overlap = (f32(az_rows) * f32(nz_rows)).sum()
-
-    pe_slots = f32(Mp) * Np * K                  # total MAC slots
-    active_frac = 1.0 - zeros / (f32(Mp) * K)    # mean input-active fraction
-    # acc register only toggles when the product is non-zero (true for the
-    # baseline too: acc + 0 leaves the register unchanged)
-    nonzero_slots = pe_slots - f32(Np) * zeros
-
-    fill = R + C - 2
-    cycles = f32(Tm) * Tn * (K + fill)
-    unload_trav = f32(Tm) * Tn * C * R * (R + 1) / 2.0     # 32b result shifts
-
-    out.update({
-        "M": f32(M), "K": f32(K), "N": f32(N),
-        "Mp": f32(Mp), "Np": f32(Np), "Tm": f32(Tm), "Tn": f32(Tn),
-        "rows": f32(R), "cols": f32(C),
-        "cycles": cycles,
-        "pe_slots": pe_slots,
-        "nonzero_slots": nonzero_slots,
-        "active_frac": active_frac,
-        "w_zeros": zeros,
-        "n_zeros": zeros_n,
-        "gated_overlap": overlap,
-        "zero_fraction": zeros / (f32(Mp) * K),
-        "unload_reg_traversals": unload_trav,
-        "west_words": f32(Tn) * Mp * K,    # West-edge words (zdet checks)
-        "north_words": f32(Tm) * Np * K,   # North-edge words (BIC encodes)
-    })
+    out.update(stream_facts(geom, M, K, N, az_rows, nz_rows))
     return out
 
 

@@ -1,2 +1,4 @@
 from .ops import *  # noqa: F401,F403
-from . import kernel, ops, ref  # noqa: F401
+from . import fused, kernel, ops, ref  # noqa: F401
+from .fused import (  # noqa: F401
+    fused_matmul_counters, fused_paged_attention, gated_row_matmul)

@@ -8,14 +8,20 @@ MXU pass and the accumulator update for that tile (``@pl.when``), saving both
 compute energy and VMEM<->MXU traffic. ReLU-sparse CNN activations and
 token-dropped MoE dispatch buffers hit this path in practice.
 
-The ``@pl.when`` tile-gating caveat (docs/kernels.md): this is a COARSE
-realization of ZVG, not the paper's per-PE, per-cycle gating. Savings
-materialize only when an entire [BM, BK] activation tile is zero, and what
-is saved is the MXU pass + operand traffic -- not the per-flop clock load
-the ASIC gates. The fine-grained proposal is quantified by the analytic
-model (``repro.core.systolic`` + ``repro.core.power``); this kernel is what
-survives of it on stock hardware. The ``gated`` output is the tile-granular
-analogue of the paper's gated-slot counter.
+Tile granularity: savings here materialize only when an entire [BM, BK]
+activation tile is zero, and what is saved is the MXU pass + operand
+traffic -- not the per-flop clock load the ASIC gates. The serving decode
+path closes most of that gap: :mod:`repro.kernels.zvg_matmul.fused` gates
+at PER-REQUEST-ROW granularity (``gated_row_matmul``), which for decode
+(one token row per request) is the finest granularity the operand stream
+exposes, and fuses the coding-menu counter accumulation into the same
+pass. The fine-grained per-PE proposal itself is quantified by the
+analytic model (``repro.core.systolic`` + ``repro.core.power``). The
+``gated`` output of THIS kernel is the tile-granular analogue of the
+paper's gated-slot counter, and its ``a != 0`` gate matches the reference
+``gated`` semantics (sign-of-zero is not tracked at tile granularity; the
+fused row kernel gates on raw value bits instead, keeping -0.0 and
+subnormal rows live so live rows are bit-identical to XLA).
 
 Dataflow: classic output-stationary tiling, grid = (M/BM, N/BN, K/BK) with K
 as the sequential minor axis; an f32 VMEM scratch accumulates the (BM, BN)

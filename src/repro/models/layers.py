@@ -194,11 +194,12 @@ def make_mlp(key, d: int, f: int, gated: bool = True) -> dict:
 
 
 def apply_mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    from . import matmul as mm
     actf = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
             "relu": jax.nn.relu}[act]
-    h = x @ p["up"].value.astype(x.dtype)
+    h = mm.matmul(x, p["up"].value.astype(x.dtype))
     if "gate" in p:
-        h = actf(x @ p["gate"].value.astype(x.dtype)) * h
+        h = actf(mm.matmul(x, p["gate"].value.astype(x.dtype))) * h
     else:
         h = actf(h)
-    return h @ p["down"].value.astype(x.dtype)
+    return mm.matmul(h, p["down"].value.astype(x.dtype))

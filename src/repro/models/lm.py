@@ -107,7 +107,8 @@ def logits_fn(params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
         if cfg.inputs == "codes":
             out = jnp.einsum("...d,kdv->...kv", h, w)
         else:
-            out = h @ w
+            from . import matmul as mm
+            out = mm.matmul(h, w)
     out = out.astype(jnp.float32) * cfg.logit_mult
     if cfg.logit_softcap > 0:
         out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap

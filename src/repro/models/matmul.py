@@ -1,0 +1,73 @@
+"""Decode-path matmul dispatch: stock XLA vs the fused Pallas kernels.
+
+The serve engine traces its decode step under
+:func:`use_kernel_backend`, so every projection / MLP / lm-head matmul
+in the model routes through :func:`matmul` and picks its implementation
+at TRACE time:
+
+* ``"ref"`` (default) -- plain ``x @ w``, the XLA path every other
+  entry point (prefill, chunked prefill, training, tracing) always
+  uses.
+* ``"pallas"`` -- :func:`repro.kernels.zvg_matmul.fused.
+  gated_row_matmul`, the ZVG-gated row matmul. Bit-identical to
+  ``x @ w`` (differential suite + end-to-end serve tests), so flipping
+  ``ServeConfig(kernel_backend=...)`` never changes tokens.
+
+The backend is a module global manipulated only by the context manager:
+model code stays signature-stable, and only functions traced inside the
+context bake in the Pallas calls. Nothing outside the serve decode jit
+ever sees a non-``ref`` backend.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax.numpy as jnp
+
+BACKENDS = ("ref", "pallas")
+
+_BACKEND = "ref"
+
+
+def current_backend() -> str:
+    """The backend model matmuls trace against right now."""
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def use_kernel_backend(name: str):
+    """Trace-scoped backend override (``with use_kernel_backend("pallas")``)."""
+    if name not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"expected one of {BACKENDS}")
+    global _BACKEND
+    prev, _BACKEND = _BACKEND, name
+    try:
+        yield
+    finally:
+        _BACKEND = prev
+
+
+def with_backend(backend: str, fn, *args):
+    """Call ``fn(*args)`` under ``use_kernel_backend(backend)``.
+
+    Partial-application target for jitting a step function with a
+    pinned backend: ``jax.jit(partial(with_backend, backend, step))``
+    traces ``step`` under the context exactly once per compilation.
+    """
+    with use_kernel_backend(backend):
+        return fn(*args)
+
+
+def matmul(x, w):
+    """Backend-dispatched ``x @ w`` for ``[..., K] @ [K, N]`` operands.
+
+    Non-2D weights (einsum-style batched projections) always take the
+    XLA path -- the gated kernel is a per-row decode matmul.
+    """
+    if _BACKEND == "ref" or w.ndim != 2:
+        return x @ w
+    from repro.kernels.zvg_matmul.fused import gated_row_matmul
+    x2 = x.reshape(-1, x.shape[-1])
+    out = gated_row_matmul(x2, jnp.asarray(w))
+    return out.reshape(x.shape[:-1] + (w.shape[-1],))

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from . import attention as A
 from . import layers as L
+from . import matmul as mm
 from . import moe as M
 from . import recurrent as R
 from . import xlstm as X
@@ -179,7 +180,7 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
 
     def proj(w, bname, nh):
         with jax.named_scope(w):
-            y = x @ p[w].value.astype(x.dtype)
+            y = mm.matmul(x, p[w].value.astype(x.dtype))
             if bname in p:
                 y = y + p[bname].value.astype(x.dtype)
         return y.reshape(b, s, nh, hd)
@@ -200,20 +201,32 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
         pg, off = _page_targets(pages, positions, pgs)
         kp = kp.at[pg, off].set(k.astype(kp.dtype))
         vp = vp.at[pg, off].set(v.astype(vp.dtype))
-        kc = _gather_pages(kp, pages)
-        vc = _gather_pages(vp, pages)
         if s == 1:
             bpos = _decode_batch_pos(cfg, positions)
-            out = A.decode_attention(q, kc, vc, bpos + 1, scale=scale,
-                                     softcap=cfg.attn_softcap,
-                                     constrain_q=cfg.pos != "mrope")
+
+            def attend(qq, kc, vc, lengths):
+                return A.decode_attention(qq, kc, vc, lengths, scale=scale,
+                                          softcap=cfg.attn_softcap,
+                                          constrain_q=cfg.pos != "mrope")
+            if mm.current_backend() == "pallas":
+                # fuse the page-table gather into the attention pass
+                # (scatter stays outside: the pools are the carried state)
+                from repro.kernels.zvg_matmul.fused import (
+                    fused_paged_attention)
+                out = fused_paged_attention(q, kp, vp, pages, bpos + 1,
+                                            attend)
+            else:
+                out = attend(q, _gather_pages(kp, pages),
+                             _gather_pages(vp, pages), bpos + 1)
         else:                                     # chunked prefill
+            kc = _gather_pages(kp, pages)
+            vc = _gather_pages(vp, pages)
             out = A.paged_chunk_attention(q, kc, vc, positions, scale=scale,
                                           softcap=cfg.attn_softcap,
                                           constrain_q=cfg.pos != "mrope")
         out = out.reshape(b, s, h * hd)
         with jax.named_scope("wo"):
-            out = out @ p["wo"].value.astype(x.dtype)
+            out = mm.matmul(out, p["wo"].value.astype(x.dtype))
         return out, (kp, vp)
 
     if state is not None:                       # ---- single-token decode
@@ -238,7 +251,7 @@ def apply_attention(p, x, cfg: ArchConfig, *, local: bool, positions,
             new_state = (kc, vc)
         out = out.reshape(b, s, h * hd)
         with jax.named_scope("wo"):
-            out = out @ p["wo"].value.astype(x.dtype)
+            out = mm.matmul(out, p["wo"].value.astype(x.dtype))
         return out, new_state
 
     if local:                                   # ---- parallel
@@ -300,7 +313,7 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
 
     if mla.q_lora_rank:
         cq = L.apply_norm("rms", p["q_norm"],
-                          x @ p["w_dq"].value.astype(x.dtype))
+                          mm.matmul(x, p["w_dq"].value.astype(x.dtype)))
         q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"].value.astype(x.dtype))
     else:
         q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].value.astype(x.dtype))
@@ -308,8 +321,8 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
     q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
 
     ckv = L.apply_norm("rms", p["kv_norm"],
-                       x @ p["w_dkv"].value.astype(x.dtype))    # [B,S,r]
-    kr = (x @ p["w_kr"].value.astype(x.dtype))[:, :, None, :]   # [B,S,1,dr]
+                       mm.matmul(x, p["w_dkv"].value.astype(x.dtype)))
+    kr = mm.matmul(x, p["w_kr"].value.astype(x.dtype))[:, :, None, :]
     kr = L.apply_rope(kr, positions, cfg.rope_theta)
 
     if state is not None:                       # ---- absorbed decode
@@ -347,7 +360,8 @@ def apply_mla(p, x, cfg: ArchConfig, *, positions, state=None,
         lat = jnp.einsum("bhst,btr->bshr", probs, ckv_c)
         out = jnp.einsum("bshr,rhe->bshe", lat,
                          p["w_uv"].value.astype(x.dtype))
-        out = out.reshape(b, s, h * dv) @ p["wo"].value.astype(x.dtype)
+        out = mm.matmul(out.reshape(b, s, h * dv),
+                        p["wo"].value.astype(x.dtype))
         return out, new_state
 
     # ---- parallel: expand per-head keys/values

@@ -46,6 +46,20 @@ LOGICAL_RULES_SERVE: dict[str, tuple[str, ...]] = {
 }
 
 
+def decode_compute_backend(mesh: Mesh | None, kernel_backend: str) -> str:
+    """The kernel backend the serve decode jit may trace.
+
+    A GSPMD-partitioned decode graph cannot host per-device
+    ``pallas_call`` bodies, so mesh decode always compiles the ``"ref"``
+    model compute regardless of ``ServeConfig.kernel_backend``. The
+    power accountant is NOT downgraded: it streams gathered local
+    operands outside the decode jit, so mesh + ``"pallas"`` keeps the
+    fused counter pass and the cross-backend bit-identity contract
+    (``tests/multidevice/test_serve_kernel_mesh.py``).
+    """
+    return kernel_backend if mesh is None else "ref"
+
+
 def _mesh_axes(mesh: Mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

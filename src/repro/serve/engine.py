@@ -43,6 +43,7 @@ have saved on this request".
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +51,7 @@ import numpy as np
 
 from repro.core import monitor as pm_monitor
 from repro.models import lm
+from repro.models import matmul as mm
 from repro.models.config import ArchConfig
 from repro.models.transformer import parse_spec
 
@@ -77,6 +79,12 @@ class ServeConfig:
     power_monitor: bool = False   # per-request BIC+ZVG power reports
     monitor: pm_monitor.MonitorConfig = pm_monitor.DEFAULT_MONITOR
     power_sample_every: int = 1   # stream every k-th decode step
+    # decode-step matmul/attention implementation: "ref" (stock XLA) or
+    # "pallas" (the fused ZVG kernels in kernels.zvg_matmul.fused).
+    # Tokens, per-request energies, and trace_report() are bit-identical
+    # across backends -- the contract tests/test_serve_kernel_backend.py
+    # pins. Only the decode jit is affected; prefill always traces "ref"
+    kernel_backend: str = "ref"
     # block-paged KV cache mode (repro.serve.paging); None = slot cache.
     # When set, max_slots is ignored in favor of paging.max_rows and
     # cache_len becomes the per-request position HORIZON, not a
@@ -99,6 +107,10 @@ class ServeEngine:
             raise ValueError(
                 f"ServeEngine serves token LMs; {cfg.name} has "
                 f"inputs={cfg.inputs!r}")
+        if scfg.kernel_backend not in mm.BACKENDS:
+            raise ValueError(
+                f"unknown kernel_backend {scfg.kernel_backend!r}; "
+                f"expected one of {mm.BACKENDS}")
         self.cfg = cfg
         self.scfg = scfg
         self.mesh = mesh
@@ -114,11 +126,18 @@ class ServeEngine:
         prefill_fn = lm.make_slot_prefill_step(cfg, scfg.cache_len)
         decode_fn = lm.make_decode_step(cfg)
         embed_fn = lm.make_embed_step(cfg)
+        from repro.runtime import sharding as rsh
+        compute_kb = rsh.decode_compute_backend(mesh, scfg.kernel_backend)
         if mesh is None:
             # decode donates the slot cache (arg 1): steady-state decode
-            # rewrites the KV rows in place instead of double-buffering
+            # rewrites the KV rows in place instead of double-buffering.
+            # Only the decode step traces under the configured kernel
+            # backend: prefill/embed stay XLA on every backend (the
+            # partial-bound backend arg does not shift donate indices)
             self._prefill = jax.jit(prefill_fn)
-            self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+            self._decode = jax.jit(
+                functools.partial(mm.with_backend, compute_kb, decode_fn),
+                donate_argnums=(1,))
             self._embed = jax.jit(embed_fn)
         else:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -134,6 +153,12 @@ class ServeEngine:
                 out_shardings=(rep, rep_like(cache_sh)))
             inputs_sh = rsh.batch_shardings(
                 mesh, self.cache.decode_inputs())
+            # mesh decode always traces the "ref" model compute
+            # (compute_kb == "ref" here; see rsh.decode_compute_backend).
+            # The accountant still honors kernel_backend -- its counters
+            # run on gathered local operands outside this jit, so mesh +
+            # "pallas" keeps the fused counter pass and the bit-identity
+            # contract
             self._decode = jax.jit(
                 decode_fn,
                 in_shardings=(self.param_shardings, cache_sh, inputs_sh),
@@ -152,8 +177,9 @@ class ServeEngine:
         mixers = {parse_spec(s)[0]
                   for s in (*cfg.pattern, *cfg.head, *cfg.tail)}
         self._pad_safe = mixers <= _PAD_SAFE_MIXERS
-        self.accountant = (PowerAccountant(scfg.monitor,
-                                           scfg.power_sample_every)
+        self.accountant = (PowerAccountant(
+                               scfg.monitor, scfg.power_sample_every,
+                               kernel_backend=scfg.kernel_backend)
                            if scfg.power_monitor else None)
         weights = (lm.pick_monitor_weights(params)
                    if scfg.power_monitor else [])

@@ -60,12 +60,147 @@ def gather_local(a):
 def _rows_counters(A: jax.Array, W: jax.Array,
                    mcfg: monitor.MonitorConfig) -> dict:
     """Per-row flat counters: ``A [B, K]`` rows each streamed against
-    ``W [K, N]``. Returns a dict of ``[B]`` arrays."""
+    ``W [K, N]``. Returns a dict of ``[B]`` arrays.
+
+    Legacy whole-graph path, kept as the fallback for multi-geometry
+    design menus; single-geometry configs (the default) go through the
+    counter-producer/assembler split below so the reference and fused
+    Pallas backends share one compiled pricing step bit-for-bit.
+    """
     def one(a):
         a2, w2 = monitor.subsample_operands(a[None, :], W, mcfg)
         return monitor.stream_counters(a2, w2, mcfg)
 
     return jax.vmap(one)(A)
+
+
+def fused_decode_supported(mcfg: monitor.MonitorConfig) -> bool:
+    """Whether the counter-producer/assembler decode split (and hence
+    the fused Pallas decode pass) can price this config.
+
+    The split walks ONE stream geometry per pass; a design list spanning
+    multiple geometries needs one pass each, which only the legacy
+    :func:`_rows_counters` fallback does. (The default paper-pair menu
+    is single-geometry, so serving configs hit the split path.)
+    """
+    from repro.design.evaluate import menu_args
+    return len(menu_args(mcfg.design_list)) == 1
+
+
+def _decode_menu(mcfg: monitor.MonitorConfig):
+    """Static decode-menu plumbing of a single-geometry config:
+    ``(geometry, menu kwargs, west CounterSpec, north CounterSpec)``."""
+    from repro.design.evaluate import menu_args
+    from repro.kernels.power_counters.spec import CounterSpec
+    (geom, kw), = menu_args(mcfg.design_list).items()
+    return (geom, kw,
+            CounterSpec(bic_variants=kw["west_bic"], zvg=kw["west_zvg"]),
+            CounterSpec(bic_variants=kw["north_bic"],
+                        zvg=kw["north_zvg"]))
+
+
+def _subsample_decode(A, W, mcfg: monitor.MonitorConfig):
+    """Batched twin of the per-row ``subsample_operands``: the strided
+    take along each axis commutes with the row batch, so every row sees
+    exactly the reference path's sample."""
+    A2 = monitor._subsample(A, mcfg.max_depth, 1)
+    W2 = monitor._subsample(
+        monitor._subsample(W, mcfg.max_depth, 0), mcfg.max_cols, 1)
+    return A2, W2
+
+
+def _pad_lanes(bits, lanes: int):
+    if lanes > bits.shape[1]:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((bits.shape[0], lanes - bits.shape[1]),
+                             jnp.uint16)], axis=1)
+    return bits
+
+
+@partial(jax.jit, static_argnames=("mcfg",))
+def _ref_decode_counters(A: jax.Array, W: jax.Array,
+                         mcfg: monitor.MonitorConfig):
+    """Reference counter producer: the decode streams' per-lane integer
+    counters via :func:`repro.kernels.power_counters.edge_counters`
+    (the config's counter backend), one west stream per request row
+    plus the shared north/weight stream. Returns ``(west_counts
+    int32[B, n_rows_w, R], west_rowzeros int32[B, K], north_counts
+    int32[n_rows_n, Np], north_rowzeros int32[K])`` -- the same
+    contract as the fused Pallas producer, feeding the same assembler.
+    """
+    from repro.core.bits import to_bits
+    from repro.kernels import power_counters as pc
+
+    geom, _, wspec, nspec = _decode_menu(mcfg)
+    A2, W2 = _subsample_decode(A, W, mcfg)
+    R, C = geom.rows, geom.cols
+    lanes_n = -(-W2.shape[1] // C) * C
+
+    wb = _pad_lanes(to_bits(W2), lanes_n)
+    nrows = pc.edge_counters(wb, nspec, backend=mcfg.backend)
+    nc = jnp.stack([nrows[name] for name in nspec.rows], axis=0)
+
+    def one(row_bits):
+        x_w = jnp.concatenate(
+            [row_bits[:, None],
+             jnp.zeros((row_bits.shape[0], R - 1), jnp.uint16)], axis=1)
+        rows = pc.edge_counters(x_w, wspec, backend=mcfg.backend)
+        return (jnp.stack([rows[name] for name in wspec.rows], axis=0),
+                rows["rowzeros"])
+
+    wc, wz = jax.vmap(one)(to_bits(A2))
+    return wc, wz, nc, nrows["rowzeros"]
+
+
+@partial(jax.jit, static_argnames=("mcfg",))
+def _fused_decode_counters(A: jax.Array, W: jax.Array,
+                           mcfg: monitor.MonitorConfig):
+    """Fused counter producer: ONE Pallas pass emits the (ZVG-gated)
+    decode products AND the same per-lane integer counters as
+    :func:`_ref_decode_counters` (bit-identical by the power_counters
+    differential contract). Returns ``(wc, wz, nc, nz, product)``."""
+    from repro.kernels.zvg_matmul.fused import fused_matmul_counters
+
+    geom, _, wspec, nspec = _decode_menu(mcfg)
+    A2, W2 = _subsample_decode(A, W, mcfg)
+    product, wc, wz, nc, nz = fused_matmul_counters(
+        A2, W2, wspec, nspec, geom.rows, geom.cols)
+    return wc, wz, nc, nz, product
+
+
+@partial(jax.jit, static_argnames=("mcfg", "ns"))
+def _assemble_decode(wc, wz, nc, nz, mcfg: monitor.MonitorConfig,
+                     ns: int):
+    """Price the per-lane integer counters into per-row flat counter
+    dicts (the :func:`monitor.stream_counters` contract).
+
+    This is ONE jitted function shared by both counter producers: both
+    feed identically-shaped integer arrays into the identical compiled
+    executable, so the reference and fused decode paths emit
+    bit-identical energies by construction (float assembly happens
+    exactly once, here). ``ns`` is the subsampled weight-column count
+    (the unpadded N of the stream facts).
+    """
+    from repro.design.evaluate import design_energy
+    from repro.core import systolic
+
+    geom, kw, wspec, nspec = _decode_menu(mcfg)
+    n_rows = {name: nc[i] for i, name in enumerate(nspec.rows)}
+    n_menu = systolic.menu_lane_sums(n_rows, "n", kw["north_bic"],
+                                     kw["north_zvg"])
+    Kd = wz.shape[1]
+    designs = mcfg.design_list
+
+    def assemble(wc_b, wz_b):
+        w_rows = {name: wc_b[i] for i, name in enumerate(wspec.rows)}
+        menu = systolic.menu_lane_sums(w_rows, "w", kw["west_bic"],
+                                       kw["west_zvg"])
+        menu.update(n_menu)
+        menu.update(systolic.stream_facts(geom, 1, Kd, ns, wz_b, nz))
+        ev = {d.name: design_energy(menu, d) for d in designs}
+        return monitor.flatten_evaluated(ev, mcfg.design_names)
+
+    return jax.vmap(assemble)(wc, wz)
 
 
 @dataclasses.dataclass
@@ -155,11 +290,26 @@ class PowerAccountant:
     """Per-slot incremental accounting, one live request per slot."""
 
     def __init__(self, mcfg: monitor.MonitorConfig = monitor.DEFAULT_MONITOR,
-                 sample_every: int = 1):
+                 sample_every: int = 1, kernel_backend: str = "ref"):
         if sample_every < 1:
             raise ValueError(f"sample_every must be >= 1: {sample_every}")
+        if kernel_backend not in ("ref", "pallas"):
+            raise ValueError(
+                f"unknown kernel_backend {kernel_backend!r}; "
+                f"expected 'ref' or 'pallas'")
         self.mcfg = mcfg
         self.sample_every = sample_every
+        # decode accounting uses the counter-producer/assembler split for
+        # single-geometry menus (the fused matmul+counter Pallas pass
+        # when kernel_backend="pallas", the edge_counters reference
+        # otherwise -- bit-identical, both feed the SAME compiled
+        # assembler); multi-geometry menus fall back to the legacy
+        # per-row stream_counters path on either backend. Prefill
+        # always stays on the reference path -- its row budget is
+        # request-shaped, not batch-shaped.
+        self.kernel_backend = kernel_backend
+        self._split = fused_decode_supported(mcfg)
+        self._fused = kernel_backend == "pallas" and self._split
         self._global_step = 0
         self._slots: dict[int, _SlotAcc] = {}
         # serve-wide registry (paper-style report over ALL traffic)
@@ -296,8 +446,17 @@ class PowerAccountant:
         """One decode-step matmul across the whole batch: ``acts [B, K]``
         (row per KV slot), ``weight [K, N]``. Only rows in ``slots`` are
         credited; the step must have been announced with :meth:`tick`."""
-        per_row = jax.device_get(_rows_counters(
-            gather_local(acts), gather_local(weight), self.mcfg))
+        A, W = gather_local(acts), gather_local(weight)
+        if self._split:
+            if self._fused:
+                wc, wz, nc, nz, _ = _fused_decode_counters(A, W, self.mcfg)
+            else:
+                wc, wz, nc, nz = _ref_decode_counters(A, W, self.mcfg)
+            per_row = jax.device_get(_assemble_decode(
+                wc, wz, nc, nz, self.mcfg,
+                min(W.shape[1], self.mcfg.max_cols)))
+        else:
+            per_row = jax.device_get(_rows_counters(A, W, self.mcfg))
         for s in slots:
             acc = self._slots[s]
             if not acc.due:

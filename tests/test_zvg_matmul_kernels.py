@@ -1,0 +1,225 @@
+"""Differential harness for the fused decode-path ZVG kernels.
+
+Mirrors ``test_power_counter_kernels.py``: the serve engine flips
+``ServeConfig(kernel_backend=...)`` on the strength of these bars, so
+everything here is BIT-EXACT (byte-for-byte, dtype included):
+
+* ``gated_row_matmul`` vs the XLA matmul it replaces across ragged
+  shapes, tile-boundary zeros, all-zero rows/matrices, -0.0 rows, and
+  source dtypes bf16 / f32 / int8 -- plus a hypothesis property over
+  random shapes and zero densities. The row kernel's exact XLA twin is
+  the PER-ROW matmul (each grid step is one ``[1, K] @ [K, N]`` pass);
+  on tiny odd shapes XLA's own full-batch gemm associates differently
+  from its row-at-a-time gemv (observed 1-18 ulp on ``[7, 5] @ [5, 9]``
+  between two stock XLA calls), so the batched-gemm comparison is
+  pinned to decode-representative shapes where the strategies coincide
+  -- the same pinned-configuration contract the end-to-end serve suite
+  enforces (docs/testing.md);
+* ``fused_matmul_counters`` (one pass -> products AND per-lane counter
+  integers) vs the reference producer ``serve.power._ref_decode_counters``,
+  and the shared-assembler guarantee: both producers priced through
+  ``_assemble_decode`` give byte-identical flat counter dicts;
+* ``fused_paged_attention`` vs gathering the page pools first and
+  running decode attention outside the kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import monitor as pm_monitor
+from repro.kernels.zvg_matmul.fused import (
+    _row_is_live, fused_matmul_counters, fused_paged_attention,
+    gated_row_matmul)
+from repro.models import attention as A
+from repro.serve.power import (
+    _assemble_decode, _decode_menu, _fused_decode_counters,
+    _ref_decode_counters, _subsample_decode, fused_decode_supported)
+
+from _hypothesis_compat import given, settings, st
+
+RNG = np.random.default_rng(7)
+MCFG = pm_monitor.DEFAULT_MONITOR
+
+SHAPES = [(1, 1, 1), (3, 64, 48), (4, 96, 128), (7, 5, 9), (8, 64, 64),
+          (1, 1100, 300)]
+
+
+def _operands(m, k, n, dtype, zero_rows=(), rng=RNG):
+    x = (rng.standard_normal((m, k)) * 0.5).astype(np.float32)
+    w = (rng.standard_normal((k, n)) * 0.05).astype(np.float32)
+    x[rng.random(x.shape) < 0.3] = 0.0
+    for r in zero_rows:
+        x[r % m] = 0.0
+    return jnp.asarray(x, dtype), jnp.asarray(w, dtype)
+
+
+def _assert_bytes_equal(got, want, ctx):
+    got, want = jax.device_get(got), jax.device_get(want)
+    assert got.dtype == want.dtype, (ctx, got.dtype, want.dtype)
+    assert got.shape == want.shape, (ctx, got.shape, want.shape)
+    gb, wb = np.asarray(got).tobytes(), np.asarray(want).tobytes()
+    assert gb == wb, f"{ctx}: payload bytes differ"
+
+
+def _rowwise_matmul(x, w):
+    """The exact XLA reference of the row kernel: one ``[1, K] @ [K, N]``
+    dot per row (what each grid step computes)."""
+    return jnp.concatenate([x[i:i + 1] @ w for i in range(x.shape[0])])
+
+
+# ----------------------------------------------------------- row matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_gated_row_matmul_bitwise_vs_rowwise(shape, dtype):
+    x, w = _operands(*shape, dtype, zero_rows=(0, shape[0] - 1))
+    _assert_bytes_equal(gated_row_matmul(x, w), _rowwise_matmul(x, w),
+                        (shape, dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(3, 64, 48), (4, 96, 128), (8, 64, 64),
+                                   (9, 64, 32), (1, 1100, 300)])
+def test_gated_row_matmul_bitwise_vs_batched_gemm(shape, dtype):
+    """On decode-representative shapes XLA's batched gemm and its
+    row-at-a-time gemv produce the same bits, so the kernel is byte-
+    identical to the full ``x @ w`` the ref serve backend runs."""
+    x, w = _operands(*shape, dtype, zero_rows=(0, shape[0] - 1))
+    _assert_bytes_equal(gated_row_matmul(x, w), x @ w, (shape, dtype))
+
+
+def test_gated_row_matmul_int8():
+    m, k, n = 5, 32, 16
+    x = RNG.integers(-4, 5, size=(m, k)).astype(np.int8)
+    x[1] = 0
+    w = RNG.integers(-4, 5, size=(k, n)).astype(np.int8)
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    _assert_bytes_equal(gated_row_matmul(x, w), x @ w, "int8")
+
+
+def test_gated_row_matmul_all_zero():
+    x = jnp.zeros((6, 40), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((40, 24)), jnp.float32)
+    _assert_bytes_equal(gated_row_matmul(x, w), x @ w, "all_zero")
+
+
+def test_gated_row_matmul_negative_zero_rows_stay_live():
+    """A -0.0 row's product carries sign information a +0.0 gate would
+    erase; the bit-level liveness test keeps it on the MXU path."""
+    x = np.zeros((4, 8), np.float32)
+    x[1] = -0.0
+    x[3, 2] = np.float32(1e-40)                 # subnormal: also live
+    w = (RNG.standard_normal((8, 6)) * 0.1).astype(np.float32)
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    assert not bool(_row_is_live(x[0:1]))
+    assert bool(_row_is_live(x[1:2]))
+    assert bool(_row_is_live(x[3:4]))
+    _assert_bytes_equal(gated_row_matmul(x, w), x @ w, "neg_zero")
+
+
+def test_gated_row_matmul_tile_boundary_zeros():
+    """Zero runs straddling the per-row grid steps: each row is its own
+    grid step, so gating one row must not disturb its neighbours."""
+    x = (RNG.standard_normal((9, 64)) * 0.5).astype(np.float32)
+    x[::2] = 0.0                                 # alternate gated rows
+    w = (RNG.standard_normal((64, 32)) * 0.1).astype(np.float32)
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    got = gated_row_matmul(x, w)
+    _assert_bytes_equal(got, x @ w, "tile_boundary")
+    assert not np.asarray(jax.device_get(got))[::2].any()
+
+
+@given(seed=st.integers(0, 2 ** 16), m=st.integers(1, 9),
+       k=st.integers(1, 130), n=st.integers(1, 70),
+       zf=st.sampled_from([0.0, 0.4, 1.0]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+@settings(max_examples=24, deadline=None)
+def test_property_gated_agrees_with_ungated(seed, m, k, n, zf, dtype):
+    """Wherever operands are nonzero the gated path runs the exact same
+    per-row matmul as the ungated one -- and gated rows produce the
+    exact signed zero the ungated product holds -- so the whole output
+    is byte-identical to the row-wise XLA reference."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((m, k)) * 0.5).astype(np.float32)
+    x[rng.random(x.shape) < zf] = 0.0
+    w = (rng.standard_normal((k, n)) * 0.1).astype(np.float32)
+    x = jnp.asarray(x, dtype)
+    w = jnp.asarray(w, dtype)
+    _assert_bytes_equal(gated_row_matmul(x, w), _rowwise_matmul(x, w),
+                        (seed, m, k, n, zf, dtype))
+
+
+# ------------------------------------------------- fused matmul+counters
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(3, 64, 48), (4, 96, 128), (8, 64, 64),
+                                   (1, 1100, 300)])
+def test_fused_counters_match_reference_producer(shape, dtype):
+    assert fused_decode_supported(MCFG)
+    x, w = _operands(*shape, dtype, zero_rows=(0,))
+    ref = _ref_decode_counters(x, w, MCFG)
+    *fused, product = _fused_decode_counters(x, w, MCFG)
+    for name, g, r in zip(("west_counts", "west_rowzeros",
+                           "north_counts", "north_rowzeros"), fused, ref):
+        _assert_bytes_equal(g, r, (shape, dtype, name))
+    A2, W2 = _subsample_decode(x, w, MCFG)
+    _assert_bytes_equal(product, A2 @ W2, (shape, dtype, "product"))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_assembled_energies_identical_across_producers(dtype):
+    """Both producers priced through the ONE shared assembler emit
+    byte-identical per-row flat counter dicts -- the construction that
+    makes ``kernel_backend`` invisible to every serve energy number."""
+    x, w = _operands(5, 96, 128, dtype, zero_rows=(2,))
+    ns = min(w.shape[1], MCFG.max_cols)
+    ref = _assemble_decode(*_ref_decode_counters(x, w, MCFG), MCFG, ns)
+    wc, wz, nc, nz, _ = _fused_decode_counters(x, w, MCFG)
+    fused = _assemble_decode(wc, wz, nc, nz, MCFG, ns)
+    assert set(ref) == set(fused)
+    for k in ref:
+        _assert_bytes_equal(fused[k], ref[k], (dtype, k))
+
+
+def test_fused_counters_all_zero_and_negative_zero_rows():
+    x = np.zeros((4, 64), np.float32)
+    x[1] = -0.0
+    x[3] = (RNG.standard_normal(64) * 0.5).astype(np.float32)
+    w = (RNG.standard_normal((64, 48)) * 0.05).astype(np.float32)
+    x, w = jnp.asarray(x), jnp.asarray(w)
+    ref = _ref_decode_counters(x, w, MCFG)
+    *fused, product = _fused_decode_counters(x, w, MCFG)
+    for g, r in zip(fused, ref):
+        _assert_bytes_equal(g, r, "zero_rows")
+    A2, W2 = _subsample_decode(x, w, MCFG)
+    _assert_bytes_equal(product, A2 @ W2, "zero_rows_product")
+
+
+def test_decode_menu_is_single_geometry():
+    geom, kw, wspec, nspec = _decode_menu(MCFG)
+    assert geom.rows >= 1 and geom.cols >= 1
+    assert wspec.n_rows >= 3 and nspec.n_rows >= 3
+
+
+# ------------------------------------------------- fused paged attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_paged_attention_matches_gather_then_attend(dtype):
+    b, mp, ps, kv, h, hd = 3, 4, 8, 2, 4, 16
+    pools = 1 + b * mp
+    kp = jnp.asarray(RNG.standard_normal((pools, ps, kv, hd)) * 0.3, dtype)
+    vp = jnp.asarray(RNG.standard_normal((pools, ps, kv, hd)) * 0.3, dtype)
+    q = jnp.asarray(RNG.standard_normal((b, 1, h, hd)) * 0.3, dtype)
+    pages = jnp.asarray(
+        RNG.permutation(np.arange(1, pools))[:b * mp].reshape(b, mp)
+        .astype(np.int32))
+    lengths = jnp.asarray(RNG.integers(1, mp * ps, size=b).astype(np.int32))
+
+    def attend(qq, kc, vc, ln):
+        return A.decode_attention(qq, kc, vc, ln, softcap=0.0)
+
+    def gather(pool):
+        view = jnp.take(pool, pages, axis=0)
+        return view.reshape((b, mp * ps) + pool.shape[2:])
+
+    got = fused_paged_attention(q, kp, vp, pages, lengths, attend)
+    want = attend(q, gather(kp), gather(vp), lengths)
+    _assert_bytes_equal(got, want.astype(q.dtype), dtype)
