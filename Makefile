@@ -5,7 +5,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test kernel-test kernels-test multidevice-test trace-smoke \
-	serve-smoke design-smoke paging-smoke kernels-smoke bench-quick ci
+	serve-smoke design-smoke paging-smoke kernels-smoke telemetry-smoke \
+	moe-smoke bench-quick ci
 
 # tier-1: the whole test suite, fail fast, with the 15 slowest tests
 # reported so suite-runtime regressions are visible in every CI log
@@ -64,7 +65,20 @@ paging-smoke:
 kernels-smoke:
 	$(PY) -m benchmarks.serve_kernels --quick --emit-json BENCH_kernels.json
 
+# end-to-end smoke of the windowed-telemetry stack: scripted traffic
+# shifts through online per-site re-selection (>= 1 design flip is
+# enforced), writing the structured-JSON CI artifact
+telemetry-smoke:
+	$(PY) -m benchmarks.serve_online --quick --emit-json BENCH_online.json
+
+# end-to-end smoke of the (otherwise dormant) phi3.5-moe config: serve
+# the expert-routing-drift scenario, then trace one forward pass
+moe-smoke:
+	$(PY) -m repro.serve.telemetry --scenario moe-drift --quick
+	$(PY) -m repro.trace --archs phi3.5-moe-42b-a6.6b --nets ''
+
 bench-quick: trace-smoke
 	$(PY) -m benchmarks.serve_throughput --quick
 
-ci: test trace-smoke serve-smoke design-smoke paging-smoke
+ci: test trace-smoke serve-smoke design-smoke paging-smoke telemetry-smoke \
+	moe-smoke

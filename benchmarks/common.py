@@ -43,6 +43,29 @@ def row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
 
 
+def emit_artifact(path: str, cells: dict, **meta) -> None:
+    """Write a benchmark's structured-JSON artifact (the CI upload):
+    metadata keys first, every measured cell under ``"cells"``."""
+    with open(path, "w") as f:
+        json.dump({**meta, "cells": cells}, f, indent=1, default=float)
+    print(f"# wrote {path}")
+
+
+def benchmark_cli(main, quick_help: str = "smaller workload (CI smoke)",
+                  argv=None) -> None:
+    """The standard benchmark entry point: ``--quick`` + ``--emit-json``,
+    the CSV header, then ``main(quick=..., emit_json=...)``."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help=quick_help)
+    ap.add_argument("--emit-json", default=None, metavar="PATH",
+                    help="also write every cell as structured JSON "
+                         "(the CI artifact)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    main(quick=args.quick, emit_json=args.emit_json)
+
+
 def analyze_cached(net: str, n_images: int = 1):
     """Cached per-layer CNN power analysis used by several benchmarks."""
     from repro.apps.cnn import analysis

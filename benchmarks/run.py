@@ -24,7 +24,8 @@ if __package__ in (None, ""):                 # script invocation: put the
 from benchmarks import (activity_reduction, bic_variants, counter_kernels,
                         fig2_distributions, fig45_per_layer, overall_savings,
                         overhead_scaling, power_monitor_lm, serve_kernels,
-                        serve_paging, serve_throughput, trace_full_model)
+                        serve_online, serve_paging, serve_throughput,
+                        trace_full_model)
 
 #: name -> (main fn, accepts quick=...). EVERY benchmark module must be
 #: registered here -- tests/test_serve_engine.py asserts the registry
@@ -40,6 +41,7 @@ SUITES = {
     "power_monitor_lm": (power_monitor_lm.main, False),
     "trace_full_model": (trace_full_model.main, True),
     "serve_kernels": (serve_kernels.main, True),
+    "serve_online": (serve_online.main, True),
     "serve_paging": (serve_paging.main, True),
     "serve_throughput": (serve_throughput.main, True),
 }

@@ -29,8 +29,6 @@ Run:  PYTHONPATH=src python -m benchmarks.serve_kernels [--quick]
 """
 from __future__ import annotations
 
-import argparse
-import json
 import time
 
 import jax
@@ -41,7 +39,7 @@ from repro.configs import SMOKES
 from repro.models import lm
 from repro.serve import ServeConfig, ServeEngine
 
-from .common import row, timed
+from .common import benchmark_cli, emit_artifact, row, timed
 
 ARCH = "qwen1.5-0.5b"
 CACHE_LEN = 64
@@ -160,20 +158,9 @@ def main(quick: bool = False, emit_json: str | None = None) -> None:
             "fused counter pass diverged from the reference producer")
 
     if emit_json:
-        with open(emit_json, "w") as f:
-            json.dump({"arch": ARCH, "cache_len": CACHE_LEN,
-                       "quick": quick, "cells": results},
-                      f, indent=1, default=float)
-        print(f"# wrote {emit_json}")
+        emit_artifact(emit_json, results, arch=ARCH, cache_len=CACHE_LEN,
+                      quick=quick)
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="trim the zero-density grid (CI smoke)")
-    ap.add_argument("--emit-json", default=None, metavar="PATH",
-                    help="also write every cell as structured JSON "
-                         "(e.g. BENCH_kernels.json, the CI artifact)")
-    args = ap.parse_args()
-    print("name,us_per_call,derived")
-    main(quick=args.quick, emit_json=args.emit_json)
+    benchmark_cli(main, quick_help="trim the zero-density grid (CI smoke)")

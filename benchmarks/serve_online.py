@@ -1,0 +1,100 @@
+"""Online-selection benchmark: windowed telemetry under shifting traffic.
+
+The question PR 8's telemetry answers: when the traffic mix SHIFTS, how
+much does re-running the paper's per-site design choice per window buy
+over freezing the fixed proposed design, and how close does the causal
+(hysteresis-damped) online track get to the oracle-static hindsight
+choice? Cells, one per scenario in
+:data:`repro.serve.telemetry.scenarios.SCENARIOS`:
+
+* ``serve_online_<scenario>`` -- the scripted traffic served with
+  telemetry on; the derived column reports windows/flips and the three
+  savings tracks (fixed / online / oracle, energies-before-ratios).
+* ``serve_online_overhead`` -- wall-clock of telemetry on vs off on the
+  shift scenario (same requests, power monitoring on in both).
+
+A run that produces NO design flip anywhere fails: the scenarios are
+constructed so the optimal west-bus coding flips between the sparse-band
+and dense-band phases (bic-west <-> mant-exp), and losing that property
+means the telemetry stack stopped seeing the statistics shift.
+
+``--emit-json BENCH_online.json`` writes every cell (including the full
+flip list) as the CI artifact uploaded beside ``BENCH_serve.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_online [--quick]
+      [--emit-json BENCH_online.json]
+"""
+from __future__ import annotations
+
+import time
+
+from .common import benchmark_cli, emit_artifact, row
+
+
+def main(quick: bool = False, emit_json: str | None = None) -> None:
+    from repro.serve.telemetry.scenarios import SCENARIOS, run_scenario
+
+    results: dict[str, dict] = {}
+    total_flips = 0
+    shift_wall = None
+    for name, scenario in sorted(SCENARIOS.items()):
+        t0 = time.perf_counter()
+        out = run_scenario(scenario, quick=quick)
+        dt = time.perf_counter() - t0
+        eng, tl = out["engine"], out["timeline"]
+        sm = tl.summary()
+        total_flips += sm["n_flips"]
+        if name == "shift":
+            shift_wall = dt
+        tok_s = eng.stats["tokens"] / dt
+        row(f"serve_online_{name}",
+            dt / max(eng.stats["decode_steps"], 1) * 1e6,
+            f"{sm['n_windows']} windows / {sm['n_flips']} flips / "
+            f"saving fixed {sm['saving_fixed'] * 100:.2f}% "
+            f"online {sm['saving_online'] * 100:.2f}% "
+            f"oracle {sm['saving_oracle'] * 100:.2f}% "
+            f"({tok_s:.0f} tok/s)")
+        results[name] = {
+            "description": scenario.description,
+            "arch": scenario.arch,
+            "tokens_per_s": tok_s,
+            "wall_s": dt,
+            **{k: sm[k] for k in ("n_windows", "n_requests", "n_flips",
+                                  "saving_fixed", "saving_online",
+                                  "saving_oracle")},
+            "oracle_choices": sm["oracle_choices"],
+            "flips": [f.to_json_dict() for f in tl.flip_events],
+        }
+
+    # --- telemetry overhead: same shift workload, power on, telemetry off
+    shift = SCENARIOS["shift"]
+    t0 = time.perf_counter()
+    run_scenario(shift, tcfg=None, quick=quick)      # warm(ish) second run
+    dt_on = time.perf_counter() - t0
+    from repro.serve.telemetry.registry import TelemetryConfig
+    t0 = time.perf_counter()
+    run_scenario(shift, tcfg=TelemetryConfig(window=10 ** 6), quick=quick)
+    dt_huge = time.perf_counter() - t0
+    # a single never-closing window does all bookkeeping but no selection:
+    # the difference isolates the per-window re-selection cost
+    sel_cost = (dt_on - dt_huge) / max(dt_huge, 1e-9) * 100
+    row("serve_online_overhead", dt_on * 1e6,
+        f"windowed selection {sel_cost:+.0f}% wall vs registry-only "
+        f"(first serve incl. compile {shift_wall:.1f}s)")
+    results["overhead"] = {"wall_selection_s": dt_on,
+                           "wall_registry_only_s": dt_huge,
+                           "selection_cost_pct": sel_cost}
+
+    if total_flips == 0:
+        raise SystemExit(
+            "no scenario produced a design flip: the telemetry stack no "
+            "longer sees the traffic shift (expected bic-west <-> "
+            "mant-exp flips on the sparse/dense phase boundary)")
+
+    if emit_json:
+        emit_artifact(emit_json, results, quick=quick,
+                      scenarios=sorted(SCENARIOS))
+
+
+if __name__ == "__main__":
+    benchmark_cli(main)

@@ -23,8 +23,6 @@ Run:  PYTHONPATH=src python -m benchmarks.serve_paging [--quick]
 """
 from __future__ import annotations
 
-import argparse
-import json
 import time
 
 import jax
@@ -34,7 +32,7 @@ from repro.configs import SMOKES
 from repro.models import lm
 from repro.serve import PagingConfig, ServeConfig, ServeEngine
 
-from .common import row
+from .common import benchmark_cli, emit_artifact, row
 
 ARCH = "qwen1.5-0.5b"
 CACHE_LEN = 64
@@ -150,20 +148,9 @@ def main(quick: bool = False, emit_json: str | None = None) -> None:
                         "streaming_saving": agg["streaming_saving"]}
 
     if emit_json:
-        with open(emit_json, "w") as f:
-            json.dump({"arch": ARCH, "cache_len": CACHE_LEN,
-                       "page_size": PAGE_SIZE, "quick": quick,
-                       "cells": results}, f, indent=1, default=float)
-        print(f"# wrote {emit_json}")
+        emit_artifact(emit_json, results, arch=ARCH, cache_len=CACHE_LEN,
+                      page_size=PAGE_SIZE, quick=quick)
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller workload (CI smoke)")
-    ap.add_argument("--emit-json", default=None, metavar="PATH",
-                    help="also write every cell as structured JSON "
-                         "(e.g. BENCH_serve.json, the CI artifact)")
-    args = ap.parse_args()
-    print("name,us_per_call,derived")
-    main(quick=args.quick, emit_json=args.emit_json)
+    benchmark_cli(main)

@@ -7,7 +7,13 @@ per retired request -- tokens generated, finish reason, and the request's
 own BIC + ZVG streaming-power report -- plus engine-level throughput,
 occupancy, and the serve-wide paper-style power aggregate.
 
+With ``--telemetry`` the engine also partitions the retirement stream
+into windows of ``--window`` requests and re-runs per-site design
+selection per window (hysteresis via ``--hysteresis``/``--min-dwell``),
+printing the flip timeline -- see docs/observability.md.
+
 Run:  PYTHONPATH=src python examples/serve_lm.py --requests 16
+      PYTHONPATH=src python examples/serve_lm.py --telemetry --window 4
 """
 import argparse
 import time
@@ -17,7 +23,8 @@ import numpy as np
 
 from repro.configs import SMOKES
 from repro.models import lm
-from repro.serve import SamplingParams, ServeConfig, ServeEngine
+from repro.serve import (SamplingParams, ServeConfig, ServeEngine,
+                         TelemetryConfig)
 
 
 def main():
@@ -30,14 +37,31 @@ def main():
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--no-power", action="store_true",
                     help="skip per-request power accounting")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="windowed online design selection + flip timeline")
+    ap.add_argument("--window", type=int, default=4,
+                    help="retired requests per telemetry window")
+    ap.add_argument("--stride", type=int, default=None,
+                    help="window stride (< window slides; default tumbling)")
+    ap.add_argument("--hysteresis", type=float, default=0.0,
+                    help="relative margin a challenger design must win by")
+    ap.add_argument("--min-dwell", type=int, default=1,
+                    help="windows an incumbent holds before challengers")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    tcfg = (TelemetryConfig(window=args.window, stride=args.stride,
+                            hysteresis=args.hysteresis,
+                            min_dwell=args.min_dwell)
+            if args.telemetry else None)
+    if args.telemetry and args.no_power:
+        ap.error("--telemetry requires power accounting (drop --no-power)")
     cfg = SMOKES[args.arch]
     params = lm.init_model(jax.random.key(0), cfg)
     engine = ServeEngine(params, cfg, ServeConfig(
         max_slots=args.slots, cache_len=args.cache_len,
-        power_monitor=not args.no_power, seed=args.seed))
+        power_monitor=not args.no_power, seed=args.seed,
+        telemetry=tcfg))
 
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
@@ -80,6 +104,12 @@ def main():
               f"{agg['total_saving'] * 100:.2f}% total / "
               f"{agg['streaming_saving'] * 100:.2f}% streaming saving, "
               f"zero fraction {agg['mean_zero_fraction'] * 100:.1f}%")
+    if args.telemetry:
+        engine.telemetry.finalize()
+        print("\nflip timeline (windows of "
+              f"{args.window} retirements, hysteresis "
+              f"{args.hysteresis:g}, min dwell {args.min_dwell}):")
+        print(engine.telemetry.timeline.table())
 
 
 if __name__ == "__main__":

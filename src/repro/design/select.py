@@ -81,6 +81,29 @@ def select_sites(site_designs: Mapping[str, Mapping[str, Mapping]],
         reference=reference, primary=primary)
 
 
+def select_counters(site_counters: Mapping[str, Mapping[str, float]],
+                    reference: str = "baseline",
+                    primary: str = "proposed",
+                    candidates: Sequence[str] | None = None) -> Selection:
+    """Greedy selection straight off accumulated FLAT counters -- the
+    incremental re-selection path.
+
+    ``site_counters`` maps site name -> summed
+    :func:`repro.core.monitor.stream_counters` keys (a counter DELTA:
+    e.g. one telemetry window's fold, or the difference of two
+    accumulator snapshots). Each site's delta is priced with
+    ``counters_to_energy`` and fed to :func:`select_sites` directly --
+    no TraceReport build, no re-pricing of streams already counted.
+    Because counters are extensive (they add across calls and windows),
+    selecting over a delta IS selecting over that traffic slice exactly.
+    """
+    from repro.core import monitor
+    site_designs = {site: monitor.counters_to_energy(dict(counters))
+                    for site, counters in site_counters.items()}
+    return select_sites(site_designs, reference=reference, primary=primary,
+                        candidates=candidates)
+
+
 def apply_selection(report, candidates: Sequence[str] | None = None
                     ) -> Selection:
     """Run greedy selection over a :class:`repro.trace.TraceReport` and

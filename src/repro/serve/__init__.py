@@ -35,12 +35,17 @@ from .paging import (ClassScheduler, PagedKVCache,            # noqa: F401
                      PagingConfig, PrefixCache, SchedClass)
 from .power import PowerAccountant, RequestPowerReport        # noqa: F401
 from .request import Request, RequestStatus                   # noqa: F401
+from .power import RetirementRecord                           # noqa: F401
 from .sampling import GREEDY, SamplingParams, sample_tokens   # noqa: F401
 from .scheduler import FIFOScheduler                          # noqa: F401
+from .telemetry import (SelectionTimeline, ServeTelemetry,    # noqa: F401
+                        TelemetryConfig, WindowedRegistry)
 
 __all__ = [
     "ClassScheduler", "FIFOScheduler", "GREEDY", "PagedKVCache",
     "PagingConfig", "PowerAccountant", "PrefixCache", "Request",
-    "RequestPowerReport", "RequestStatus", "SamplingParams", "SchedClass",
-    "ServeConfig", "ServeEngine", "SlotCache", "sample_tokens",
+    "RequestPowerReport", "RequestStatus", "RetirementRecord",
+    "SamplingParams", "SchedClass", "SelectionTimeline", "ServeConfig",
+    "ServeEngine", "ServeTelemetry", "SlotCache", "TelemetryConfig",
+    "WindowedRegistry", "sample_tokens",
 ]

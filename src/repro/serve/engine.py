@@ -90,6 +90,10 @@ class ServeConfig:
     # cache_len becomes the per-request position HORIZON, not a
     # per-request HBM reservation
     paging: "object | None" = None
+    # windowed telemetry + online per-site design re-selection
+    # (repro.serve.telemetry.TelemetryConfig); requires power_monitor.
+    # None = off. Read results via engine.telemetry_report()
+    telemetry: "object | None" = None
 
 
 class ServeEngine:
@@ -181,6 +185,16 @@ class ServeEngine:
                                scfg.monitor, scfg.power_sample_every,
                                kernel_backend=scfg.kernel_backend)
                            if scfg.power_monitor else None)
+        self.telemetry = None
+        if scfg.telemetry is not None:
+            if self.accountant is None:
+                raise ValueError(
+                    "ServeConfig.telemetry requires power_monitor=True: "
+                    "the windowed registry consumes the accountant's "
+                    "retirement records")
+            from .telemetry import ServeTelemetry
+            self.telemetry = ServeTelemetry(scfg.telemetry, scfg.monitor)
+            self.accountant.retire_hooks.append(self.telemetry.on_retire)
         weights = (lm.pick_monitor_weights(params)
                    if scfg.power_monitor else [])
         if mesh is not None:
@@ -380,6 +394,18 @@ class ServeEngine:
         from repro.trace.report import build_report
         return build_report(self.accountant.capture,
                             model=f"serve/{self.cfg.name}")
+
+    def telemetry_report(self) -> dict:
+        """Finalize and return the telemetry roll-up (windows + flip
+        timeline + fixed/online/oracle savings tracks); requires
+        ``ServeConfig.telemetry``. Finalization closes still-open
+        windows as partial and fills the oracle-static track, so call
+        this after the run drains."""
+        if self.telemetry is None:
+            raise RuntimeError(
+                "telemetry is off (set ServeConfig.telemetry to a "
+                "TelemetryConfig)")
+        return self.telemetry.report()
 
     def occupancy(self) -> float:
         """Mean live slots per decode step (batch efficiency)."""

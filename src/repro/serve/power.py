@@ -203,6 +203,60 @@ def _assemble_decode(wc, wz, nc, nz, mcfg: monitor.MonitorConfig,
     return jax.vmap(assemble)(wc, wz)
 
 
+@dataclasses.dataclass(frozen=True)
+class SiteRecord:
+    """One monitored site's frozen contribution to one retired request:
+    exactly the ``(site, kind, shape, counters)`` tuple the accountant
+    books into the serve-wide capture at retirement -- same floats, same
+    order -- so replaying SiteRecords through ``record_counters``
+    reproduces the capture bit-for-bit."""
+    site: str
+    kind: str
+    shape: tuple[int, ...]
+    counters: dict           # flat counters incl. "zero_fraction"
+
+    def to_json_dict(self) -> dict:
+        return {"site": self.site, "kind": self.kind,
+                "shape": list(self.shape), "counters": dict(self.counters)}
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "SiteRecord":
+        return cls(site=d["site"], kind=d["kind"],
+                   shape=tuple(d["shape"]), counters=dict(d["counters"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetirementRecord:
+    """Everything one retirement contributes to serve-wide accounting, as
+    plain data: the unit the windowed-telemetry registry partitions
+    (:mod:`repro.serve.telemetry`). Emitted to every hook in
+    ``PowerAccountant.retire_hooks`` at the same moment the counters are
+    booked into the capture, so window sums and ``trace_report()`` are
+    two views of the one retirement stream."""
+    uid: int
+    prompt_tokens: int
+    new_tokens: int
+    decode_steps: int
+    sampled_steps: int
+    sites: tuple[SiteRecord, ...]
+
+    def to_json_dict(self) -> dict:
+        return {"uid": self.uid, "prompt_tokens": self.prompt_tokens,
+                "new_tokens": self.new_tokens,
+                "decode_steps": self.decode_steps,
+                "sampled_steps": self.sampled_steps,
+                "sites": [s.to_json_dict() for s in self.sites]}
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "RetirementRecord":
+        return cls(uid=d["uid"], prompt_tokens=d["prompt_tokens"],
+                   new_tokens=d["new_tokens"],
+                   decode_steps=d["decode_steps"],
+                   sampled_steps=d["sampled_steps"],
+                   sites=tuple(SiteRecord.from_json_dict(s)
+                               for s in d["sites"]))
+
+
 @dataclasses.dataclass
 class RequestPowerReport:
     """Frozen power outcome of one retired request (energies in fJ,
@@ -314,6 +368,10 @@ class PowerAccountant:
         self._slots: dict[int, _SlotAcc] = {}
         # serve-wide registry (paper-style report over ALL traffic)
         self.capture = TraceCapture(CaptureConfig(monitor=mcfg))
+        # retirement-stream observers: each callable receives the
+        # RetirementRecord of every finished request, AFTER its counters
+        # were booked into the capture (the telemetry registry's feed)
+        self.retire_hooks: list = []
 
     # ----------------------------------------------------------- lifecycle
     def begin(self, slot: int, uid: int, prompt_tokens: int) -> None:
@@ -350,14 +408,15 @@ class PowerAccountant:
         scale = acc.decode_steps / max(acc.sampled_steps, 1)
         total: dict[str, float] = {}
         zf_sum = zf_n = 0.0
+        site_records: list[SiteRecord] = []
         for site, rec in acc.prefill.items():
             for k, v in rec.counters.items():
                 total[k] = total.get(k, 0.0) + v
             zf_sum += rec.zf_sum
             zf_n += rec.zf_n
-            self.capture.record_counters(
+            site_records.append(SiteRecord(
                 site, "dot_general", rec.shape,
-                {**rec.counters, "zero_fraction": rec.zf_mean})
+                {**rec.counters, "zero_fraction": rec.zf_mean}))
         for site, rec in acc.decode.items():
             scaled = {k: v * scale for k, v in rec.counters.items()}
             for k, v in scaled.items():
@@ -366,9 +425,21 @@ class PowerAccountant:
             zf_n += rec.zf_n
             # MACs extrapolate with the energies: all decode steps count
             shape = (acc.decode_steps,) + rec.shape[1:]
-            self.capture.record_counters(
+            site_records.append(SiteRecord(
                 site, "dot_general", shape,
-                {**scaled, "zero_fraction": rec.zf_mean})
+                {**scaled, "zero_fraction": rec.zf_mean}))
+        # ONE frozen per-site record set, booked into the capture AND
+        # handed to every retirement hook: the serve-wide report and any
+        # windowed view are sums over the identical floats
+        for sr in site_records:
+            self.capture.record_counters(sr.site, sr.kind, sr.shape,
+                                         sr.counters)
+        retirement = RetirementRecord(
+            uid=acc.uid, prompt_tokens=acc.prompt_tokens,
+            new_tokens=new_tokens, decode_steps=acc.decode_steps,
+            sampled_steps=acc.sampled_steps, sites=tuple(site_records))
+        for hook in self.retire_hooks:
+            hook(retirement)
         energy = monitor.counters_to_energy(total)
         # zero-fill every configured design so a request that retired with
         # no sampled records still yields a well-formed (all-zero) report

@@ -1,0 +1,86 @@
+"""repro.serve.telemetry -- windowed counter telemetry + online
+traffic-aware design selection.
+
+The serve accountant already attributes every streamed operand to a
+request; this package watches that stream in MOTION. A
+:class:`WindowedRegistry` partitions the per-request retirement records
+into tumbling or sliding windows (boundaries at request retirement --
+windows are exact sums of whole per-request reports, and replaying all
+windows reproduces ``engine.trace_report()`` bit-exactly); an
+:class:`OnlineSelector` re-runs the paper's per-site greedy design
+choice on every closed window with hysteresis + dwell damping, emitting
+a :class:`SelectionTimeline` of per-site design flips and
+fixed-vs-online-vs-oracle savings tracks. Scenario drivers
+(:mod:`.scenarios`) script the traffic shifts that make the optimal
+design flip; ``python -m repro.serve.telemetry`` replays dumped records
+offline for window/hysteresis what-ifs. See docs/observability.md.
+
+Wiring: set ``ServeConfig(power_monitor=True, telemetry=
+TelemetryConfig(...))`` -- the engine (slot or paged) hangs a
+:class:`ServeTelemetry` off the accountant's retirement hook and
+exposes ``engine.telemetry_report()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import monitor
+
+from .registry import (TelemetryConfig, Window,       # noqa: F401
+                       WindowedRegistry, load_records)
+from .selector import (FlipEvent, OnlineSelector,     # noqa: F401
+                       SelectionTimeline, WindowSelection)
+
+__all__ = [
+    "FlipEvent", "OnlineSelector", "SelectionTimeline", "ServeTelemetry",
+    "TelemetryConfig", "Window", "WindowSelection", "WindowedRegistry",
+    "load_records",
+]
+
+
+class ServeTelemetry:
+    """Registry + selector, wired: feed retirements, read the timeline.
+
+    ``on_retire`` is the accountant hook; the registry fires the
+    selector on every closed window. :meth:`finalize` (idempotent)
+    closes partial windows and fills the oracle-static track;
+    :meth:`report` is the JSON-ready roll-up ``engine.telemetry_report()``
+    returns.
+    """
+
+    def __init__(self, tcfg: TelemetryConfig,
+                 mcfg: monitor.MonitorConfig = monitor.DEFAULT_MONITOR):
+        self.tcfg = tcfg
+        self.mcfg = mcfg
+        self.registry = WindowedRegistry(tcfg, mcfg)
+        self.selector = OnlineSelector(tcfg, mcfg)
+        self.registry.on_window.append(self.selector.observe)
+        self._finalized = False
+
+    def on_retire(self, rec) -> None:
+        self.registry.observe(rec)
+
+    @property
+    def timeline(self) -> SelectionTimeline:
+        return self.selector.timeline
+
+    def finalize(self) -> SelectionTimeline:
+        """Close out the run: flush partial windows through the selector,
+        then fill the oracle-static savings track. Idempotent."""
+        if not self._finalized:
+            self._finalized = True
+            self.registry.flush()
+            self.selector.finalize(self.registry)
+        return self.selector.timeline
+
+    def report(self) -> dict:
+        timeline = self.finalize()
+        return {
+            "schema": "repro.serve.telemetry/report/v1",
+            "config": dataclasses.asdict(self.tcfg),
+            "designs": list(self.mcfg.design_names),
+            "n_retired": self.registry.n_retired,
+            "windows": [w.summary()
+                        for w in self.registry.closed_windows()],
+            "timeline": timeline.to_json_dict(),
+        }

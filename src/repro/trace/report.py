@@ -37,6 +37,23 @@ _DERIVED = ("activity_reduction", "saving_total", "saving_streaming",
             "streaming_share")
 
 
+def write_json(path: str, payload: dict) -> None:
+    """Write one JSON artifact the repo's standard way (indent=1, so
+    diffs stay line-per-field). Shared by trace reports, telemetry
+    timelines and benchmark artifacts."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def write_csv(path: str, cols, rows) -> None:
+    """Write a header + rows CSV; every cell is ``str()``-formatted (the
+    repo's artifacts hold names and numbers, never quoted text)."""
+    with open(path, "w") as f:
+        f.write(",".join(str(c) for c in cols) + "\n")
+        for row in rows:
+            f.write(",".join(str(v) for v in row) + "\n")
+
+
 @dataclasses.dataclass
 class SitePower:
     """One matmul site's accumulated power outcome (fJ, estimated full).
@@ -161,8 +178,7 @@ class TraceReport:
         }
 
     def to_json(self, path: str) -> None:
-        with open(path, "w") as f:
-            json.dump(self.to_json_dict(), f, indent=1)
+        write_json(path, self.to_json_dict())
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "TraceReport":
@@ -199,18 +215,18 @@ class TraceReport:
         cols = ("name", "kind", "calls", "B", "M", "K", "N", "macs",
                 "zero_fraction", "activity_reduction", "saving_total",
                 "saving_streaming", "streaming_share", "selected")
-        design_cols = [f"energy_{d}" for d in self.designs]
-        with open(path, "w") as f:
-            f.write(",".join(cols + tuple(design_cols)) + "\n")
-            for s in self.sites:
-                b, m, k, n = s.shape
-                vals = (s.name, s.kind, s.calls, b, m, k, n, s.macs,
-                        s.zero_fraction, s.activity_reduction,
-                        s.saving_total, s.saving_streaming,
-                        s.streaming_share, s.selected)
-                vals += tuple(s.designs[d]["total"] if d in s.designs
-                              else "" for d in self.designs)
-                f.write(",".join(str(v) for v in vals) + "\n")
+        cols += tuple(f"energy_{d}" for d in self.designs)
+        rows = []
+        for s in self.sites:
+            b, m, k, n = s.shape
+            vals = (s.name, s.kind, s.calls, b, m, k, n, s.macs,
+                    s.zero_fraction, s.activity_reduction,
+                    s.saving_total, s.saving_streaming,
+                    s.streaming_share, s.selected)
+            vals += tuple(s.designs[d]["total"] if d in s.designs
+                          else "" for d in self.designs)
+            rows.append(vals)
+        write_csv(path, cols, rows)
 
     # --------------------------------------------------------------- text
     def table(self, max_rows: int = 40) -> str:

@@ -1,0 +1,318 @@
+"""Invariants of repro.serve.telemetry (windowed counters + online
+selection).
+
+The contract that makes windowed telemetry trustworthy:
+
+  * **lossless partition** -- replaying every window's records (deduped
+    by retirement seq for sliding overlap) reproduces
+    ``engine.trace_report()`` BIT-exactly: tumbling and sliding, any
+    ``power_sample_every``, slot and paged engines alike. Windows are a
+    view of the accounting, never a second estimate.
+  * **scripted flips are found** -- the two-phase shift scenario flips
+    the prefill-site winner from mant-exp (sparse band) to bic-west
+    (dense band), and the selector records the flip with its margin;
+  * **damping damps** -- a large hysteresis margin or dwell requirement
+    suppresses those same flips without touching the energy tracks;
+  * **replay is exact** -- records dumped to JSON re-window into the
+    identical timeline (floats round-trip), so offline knob sweeps are
+    honest;
+  * **selection tracks order** -- online >= fixed as window count grows,
+    oracle is the best static assignment in hindsight, and
+    ``select_counters`` agrees with report-level selection on the same
+    totals.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import SMOKES
+from repro.design.select import select_counters, select_sites
+from repro.models import lm
+from repro.serve import (ServeConfig, ServeEngine, ServeTelemetry,
+                         TelemetryConfig, WindowedRegistry)
+from repro.serve.telemetry import load_records
+from repro.serve.telemetry.scenarios import (SCENARIOS, run_scenario,
+                                             scenario_monitor,
+                                             scenario_requests,
+                                             sparsify_embeddings)
+
+
+def _report_bytes(report) -> str:
+    return json.dumps(report.to_json_dict(), sort_keys=True)
+
+
+@pytest.fixture(scope="module")
+def shift_run():
+    """The two-phase shift scenario, served once (slot engine)."""
+    return run_scenario("shift", tcfg=TelemetryConfig(window=4),
+                        quick=True)
+
+
+@pytest.fixture(scope="module")
+def shift_records(shift_run):
+    reg = shift_run["engine"].telemetry.registry
+    return reg.records, reg.mcfg
+
+
+# --------------------------------------------------------- window sums
+def _serve_with_telemetry(paged: bool, sample_every: int,
+                          tcfg: TelemetryConfig):
+    """A small mixed workload through an engine with telemetry on."""
+    cfg = SMOKES["qwen1.5-0.5b"].with_(compute_dtype="float32")
+    params = lm.init_model(jax.random.key(0), cfg)
+    sparsify_embeddings(params, (0, 64), 0.9)
+    paging = None
+    if paged:
+        from repro.serve import PagingConfig
+        paging = PagingConfig(page_size=8, num_pages=13, max_rows=4)
+    eng = ServeEngine(params, cfg, ServeConfig(
+        max_slots=2, cache_len=48, power_monitor=True,
+        monitor=scenario_monitor(), power_sample_every=sample_every,
+        telemetry=tcfg, paging=paging))
+    rng = np.random.default_rng(7)
+    for lo, hi in ((0, 64), (64, 256), (0, 64), (64, 256), (0, 256),
+                   (64, 256), (0, 64)):
+        eng.submit(list(map(int, rng.integers(lo, hi,
+                                              int(rng.integers(4, 14))))),
+                   max_new_tokens=4)
+    eng.run()
+    eng.telemetry.finalize()
+    return eng
+
+
+@pytest.mark.parametrize("paged,sample_every,stride", [
+    (False, 1, None),      # slot, every step, tumbling
+    (False, 3, 2),         # slot, sampled counters, sliding overlap
+    (True, 2, None),       # paged engine, sampled, tumbling
+])
+def test_window_sums_bitexact(paged, sample_every, stride):
+    """Windows replay to the serve-wide report bit for bit -- any
+    engine, any counter sampling cadence, tumbling or sliding."""
+    eng = _serve_with_telemetry(paged, sample_every,
+                                TelemetryConfig(window=3, stride=stride))
+    reg = eng.telemetry.registry
+    assert reg.n_retired == 7
+    merged = reg.merged_report(model=f"serve/{eng.cfg.name}")
+    assert _report_bytes(merged) == _report_bytes(eng.trace_report())
+
+
+def test_rewindowing_any_geometry_bitexact(shift_records):
+    """Offline re-windowing of the same records preserves the invariant
+    for every (window, stride) geometry -- no re-serve needed."""
+    records, mcfg = shift_records
+    want = None
+
+    @settings(max_examples=8)
+    @given(st.tuples(st.integers(1, 6), st.integers(1, 6)))
+    def prop(geom):
+        nonlocal want
+        window, stride = max(geom), min(geom)   # stride <= window
+        reg = WindowedRegistry(TelemetryConfig(window=window,
+                                               stride=stride), mcfg)
+        for rec in records:
+            reg.observe(rec)
+        reg.flush()
+        got = _report_bytes(reg.merged_report())
+        if want is None:
+            want = got
+        assert got == want
+        # tumbling geometries are true partitions: every retirement in
+        # exactly one window
+        if stride == window:
+            assert sum(w.n_requests for w in reg.windows) == len(records)
+
+    prop()
+
+
+def test_windows_are_whole_requests(shift_run):
+    """No request is split across a window boundary: window uid sets are
+    disjoint (tumbling) and every retirement is covered."""
+    reg = shift_run["engine"].telemetry.registry
+    seen = [u for w in reg.windows for u in w.uids]
+    assert len(seen) == len(set(seen)) == reg.n_retired
+
+
+# ------------------------------------------------------------ the flip
+def test_scripted_shift_flips(shift_run):
+    """The code->chat phase boundary flips the prefill winner from
+    mant-exp (sparse band) to bic-west (dense band), and the selector
+    sees it."""
+    tl = shift_run["timeline"]
+    assert tl.n_flips >= 1
+    prefill_flips = [f for f in tl.flip_events
+                     if f.site.startswith("prefill/")]
+    assert prefill_flips, f"no prefill flip in {tl.flip_events}"
+    for f in prefill_flips:
+        assert (f.old, f.new) == ("mant-exp", "bic-west")
+        assert f.margin > 0
+    # flips land at the dense-phase window, not the first
+    assert all(f.window >= 1 for f in tl.flip_events)
+
+
+def test_savings_tracks_order(shift_run):
+    """Online (adaptive) never loses to the fixed primary on the traffic
+    it adapted to, and both are real savings vs baseline."""
+    sm = shift_run["timeline"].summary()
+    assert sm["saving_online"] >= sm["saving_fixed"] > 0
+    assert sm["saving_oracle"] > 0
+    assert set(sm["oracle_choices"]) == set(
+        shift_run["timeline"].windows[0].choices)
+
+
+def test_dwell_runs_cover_windows(shift_run):
+    tl = shift_run["timeline"]
+    for site, runs in tl.dwell_times().items():
+        assert sum(n for _, n in runs) == len(tl.windows)
+
+
+def _replay(records, mcfg, **knobs):
+    telem = ServeTelemetry(TelemetryConfig(**knobs), mcfg)
+    for rec in records:
+        telem.on_retire(rec)
+    return telem.finalize()
+
+
+def test_hysteresis_damps_flips(shift_records):
+    """A margin requirement far above the real ~0.2% margins freezes the
+    incumbent; the raw per-window winners still change."""
+    records, mcfg = shift_records
+    tl = _replay(records, mcfg, window=4, hysteresis=0.5)
+    assert tl.n_flips == 0
+    raw = {w.raw_choices["prefill/layer0/wq"] for w in tl.windows}
+    assert len(raw) > 1          # the statistics DID shift
+    # choices never moved off the first window's pick
+    first = tl.windows[0].choices
+    assert all(w.choices == first for w in tl.windows)
+
+
+def test_min_dwell_damps_flips(shift_records):
+    records, mcfg = shift_records
+    free = _replay(records, mcfg, window=2)
+    assert free.n_flips >= 1
+    held = _replay(records, mcfg, window=2, min_dwell=100)
+    assert held.n_flips == 0
+
+
+def test_candidate_subset_and_validation(shift_records):
+    records, mcfg = shift_records
+    tl = _replay(records, mcfg, window=4,
+                 candidates=("baseline", "proposed"))
+    used = {c for w in tl.windows for c in w.choices.values()}
+    assert used <= {"baseline", "proposed"}
+    with pytest.raises(ValueError, match="not in the monitor's design"):
+        _replay(records, mcfg, window=4, candidates=("nope",))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="stride"):
+        TelemetryConfig(window=4, stride=5)
+    with pytest.raises(ValueError, match="window"):
+        TelemetryConfig(window=0)
+    with pytest.raises(ValueError, match="min_dwell"):
+        TelemetryConfig(min_dwell=0)
+    with pytest.raises(ValueError, match="hysteresis"):
+        TelemetryConfig(hysteresis=-0.1)
+
+
+def test_telemetry_requires_power_monitor():
+    cfg = SMOKES["qwen1.5-0.5b"].with_(compute_dtype="float32")
+    params = lm.init_model(jax.random.key(0), cfg)
+    with pytest.raises(ValueError, match="power_monitor"):
+        ServeEngine(params, cfg, ServeConfig(
+            max_slots=2, cache_len=48, telemetry=TelemetryConfig()))
+
+
+# ----------------------------------------------------- replay / serde
+def test_records_roundtrip_and_cli_replay(shift_run, tmp_path):
+    """dump_records -> CLI replay reproduces the timeline bit-exactly
+    (floats survive JSON), and the registry refuses post-flush feeds."""
+    eng = shift_run["engine"]
+    reg = eng.telemetry.registry
+    rec_path = tmp_path / "records.json"
+    reg.dump_records(str(rec_path))
+    meta, records = load_records(str(rec_path))
+    assert meta["reference"] == "baseline"
+    assert len(records) == reg.n_retired
+
+    from repro.serve.telemetry.__main__ import main as cli_main
+    out = tmp_path / "timeline.json"
+    csv = tmp_path / "timeline.csv"
+    assert cli_main(["--replay", str(rec_path), "--window", "4",
+                     "--json", str(out), "--csv", str(csv)]) == 0
+    direct = shift_run["timeline"].to_json_dict()
+    replayed = json.loads(out.read_text())
+    assert (json.dumps(replayed, sort_keys=True)
+            == json.dumps(direct, sort_keys=True))
+    rows = csv.read_text().strip().splitlines()
+    n_sites = len(shift_run["timeline"].windows[0].choices)
+    assert len(rows) == 1 + n_sites * len(direct["windows"])
+
+    with pytest.raises(RuntimeError, match="flushed"):
+        reg.observe(records[0])
+
+    with pytest.raises(ValueError, match="not a telemetry records"):
+        bad = tmp_path / "bad.json"
+        bad.write_text('{"schema": "other"}')
+        load_records(str(bad))
+
+
+def test_telemetry_report_shape(shift_run):
+    rep = shift_run["report"]
+    assert rep["schema"] == "repro.serve.telemetry/report/v1"
+    assert rep["n_retired"] == sum(w["n_requests"]
+                                   for w in rep["windows"])
+    tl = rep["timeline"]
+    assert tl["schema"] == "repro.serve.telemetry/timeline/v1"
+    assert tl["summary"]["n_flips"] == len(tl["flips"])
+
+
+# ------------------------------------------------- selection coherence
+def test_select_counters_matches_select_sites(shift_run):
+    """Counter-delta selection and energy-level selection agree on the
+    same totals (the incremental path introduces no drift)."""
+    from repro.core import monitor
+    reg = shift_run["engine"].telemetry.registry
+    merged: dict = {}
+    for rec in reg.records:
+        for sr in rec.sites:
+            acc = merged.setdefault(sr.site, {})
+            for k, v in sr.counters.items():
+                if k != "zero_fraction":
+                    acc[k] = acc.get(k, 0.0) + float(v)
+    a = select_counters(merged)
+    b = select_sites({site: monitor.counters_to_energy(dict(c))
+                      for site, c in merged.items()})
+    assert a.choices == b.choices
+    assert a.saving_total == b.saving_total
+
+
+# ------------------------------------------------------- MoE scenario
+def test_moe_drift_scenario_serves():
+    """The dormant phi3.5-moe smoke config serves end to end under
+    telemetry; its monitored sites are the attention projections (the
+    MoE ffn exposes no 'up' weight to monitor)."""
+    out = run_scenario("moe-drift", quick=True)
+    tl = out["timeline"]
+    assert out["engine"].cfg.name == "phi3.5-moe-42b-a6.6b"
+    assert len(tl.windows) >= 2
+    sites = {s for w in tl.windows for s in w.choices}
+    assert sites == {"prefill/layer0/wq", "decode/layer0/wq"}
+    reg = out["engine"].telemetry.registry
+    assert _report_bytes(reg.merged_report(
+        model=f"serve/{out['engine'].cfg.name}")) \
+        == _report_bytes(out["engine"].trace_report())
+
+
+def test_scenario_registry_consistency():
+    """Every scenario materializes a non-empty phased request stream
+    inside its architecture's vocab."""
+    for name, sc in SCENARIOS.items():
+        vocab = SMOKES[sc.arch].vocab
+        reqs = scenario_requests(sc, quick=True)
+        assert len(reqs) >= 2 * len(sc.phases)
+        for _, prompt, max_new in reqs:
+            assert max_new >= 1 and prompt
+            assert all(0 <= t < vocab for t in prompt)
