@@ -6,7 +6,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test kernel-test kernels-test multidevice-test trace-smoke \
 	serve-smoke design-smoke paging-smoke kernels-smoke telemetry-smoke \
-	moe-smoke bench-quick ci
+	moe-smoke schema-check kernels-schema-check bench-quick ci
 
 # tier-1: the whole test suite, fail fast, with the 15 slowest tests
 # reported so suite-runtime regressions are visible in every CI log
@@ -77,8 +77,19 @@ moe-smoke:
 	$(PY) -m repro.serve.telemetry --scenario moe-drift --quick
 	$(PY) -m repro.trace --archs phi3.5-moe-42b-a6.6b --nets ''
 
+# validate the structured-JSON CI artifacts against their committed
+# schemas (schemas/bench_*.schema.json) -- a silently renamed or dropped
+# cell is a broken downstream consumer, so it must be a red CI step.
+# Runs after the smokes that emit the artifacts.
+schema-check:
+	$(PY) tools/check_bench_schema.py BENCH_serve.json BENCH_online.json
+
+# same, for the artifact the kernels CI job emits (kernels-smoke)
+kernels-schema-check:
+	$(PY) tools/check_bench_schema.py BENCH_kernels.json
+
 bench-quick: trace-smoke
 	$(PY) -m benchmarks.serve_throughput --quick
 
 ci: test trace-smoke serve-smoke design-smoke paging-smoke telemetry-smoke \
-	moe-smoke
+	moe-smoke schema-check

@@ -8,8 +8,13 @@ choice? Cells, one per scenario in
 :data:`repro.serve.telemetry.scenarios.SCENARIOS`:
 
 * ``serve_online_<scenario>`` -- the scripted traffic served with
-  telemetry on; the derived column reports windows/flips and the three
-  savings tracks (fixed / online / oracle, energies-before-ratios).
+  telemetry on and actuation closed-loop; the derived column reports
+  windows/flips/swaps and the four savings tracks (fixed / online /
+  oracle / actuated, energies-before-ratios). Actuation is pricing
+  bookkeeping only (the served tokens and counters are identical with
+  it on or off), so one actuated serve yields all four tracks; every
+  scenario must land actuated >= fixed, or the closed loop stopped
+  paying for itself.
 * ``serve_online_overhead`` -- wall-clock of telemetry on vs off on the
   shift scenario (same requests, power monitoring on in both).
 
@@ -32,6 +37,7 @@ from .common import benchmark_cli, emit_artifact, row
 
 
 def main(quick: bool = False, emit_json: str | None = None) -> None:
+    from repro.serve.telemetry.registry import TelemetryConfig
     from repro.serve.telemetry.scenarios import SCENARIOS, run_scenario
 
     results: dict[str, dict] = {}
@@ -39,20 +45,30 @@ def main(quick: bool = False, emit_json: str | None = None) -> None:
     shift_wall = None
     for name, scenario in sorted(SCENARIOS.items()):
         t0 = time.perf_counter()
-        out = run_scenario(scenario, quick=quick)
+        out = run_scenario(
+            scenario, quick=quick,
+            tcfg=TelemetryConfig(window=scenario.window, actuate=True))
         dt = time.perf_counter() - t0
         eng, tl = out["engine"], out["timeline"]
         sm = tl.summary()
         total_flips += sm["n_flips"]
         if name == "shift":
             shift_wall = dt
+        if sm["saving_actuated"] + 1e-12 < sm["saving_fixed"]:
+            raise SystemExit(
+                f"scenario {name!r}: actuated track "
+                f"({sm['saving_actuated'] * 100:.3f}%) fell below the "
+                f"fixed-primary track ({sm['saving_fixed'] * 100:.3f}%) "
+                f"-- the closed loop is committing losing swaps")
         tok_s = eng.stats["tokens"] / dt
         row(f"serve_online_{name}",
             dt / max(eng.stats["decode_steps"], 1) * 1e6,
             f"{sm['n_windows']} windows / {sm['n_flips']} flips / "
+            f"{sm['n_swaps']} swaps / "
             f"saving fixed {sm['saving_fixed'] * 100:.2f}% "
             f"online {sm['saving_online'] * 100:.2f}% "
             f"oracle {sm['saving_oracle'] * 100:.2f}% "
+            f"actuated {sm['saving_actuated'] * 100:.2f}% "
             f"({tok_s:.0f} tok/s)")
         results[name] = {
             "description": scenario.description,
@@ -60,10 +76,12 @@ def main(quick: bool = False, emit_json: str | None = None) -> None:
             "tokens_per_s": tok_s,
             "wall_s": dt,
             **{k: sm[k] for k in ("n_windows", "n_requests", "n_flips",
-                                  "saving_fixed", "saving_online",
-                                  "saving_oracle")},
+                                  "n_swaps", "saving_fixed",
+                                  "saving_online", "saving_oracle",
+                                  "saving_actuated")},
             "oracle_choices": sm["oracle_choices"],
             "flips": [f.to_json_dict() for f in tl.flip_events],
+            "swaps": [s.to_json_dict() for s in tl.swaps],
         }
 
     # --- telemetry overhead: same shift workload, power on, telemetry off

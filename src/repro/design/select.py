@@ -81,6 +81,32 @@ def select_sites(site_designs: Mapping[str, Mapping[str, Mapping]],
         reference=reference, primary=primary)
 
 
+def swap_deltas(site_designs: Mapping[str, Mapping[str, Mapping]],
+                old_choices: Mapping[str, str],
+                new_choices: Mapping[str, str],
+                component: str = "total") -> dict[str, float]:
+    """Per-site energy deltas (fJ, new minus old) of a staged swap set,
+    straight off per-site design energies -- no report rebuild.
+
+    This is the actuation path's pricing primitive: when the online
+    selector commits flips, the engine needs "what does swapping THESE
+    sites cost/save on the window that drove the flip" without
+    re-aggregating a TraceReport. Sites whose choice did not change are
+    omitted; a negative delta means the new design is cheaper."""
+    out: dict[str, float] = {}
+    for site, new in new_choices.items():
+        old = old_choices.get(site, new)
+        if old == new:
+            continue
+        designs = site_designs[site]
+        missing = [n for n in (old, new) if n not in designs]
+        if missing:
+            raise KeyError(f"site {site!r} has no energies for {missing}")
+        out[site] = (float(designs[new][component])
+                     - float(designs[old][component]))
+    return out
+
+
 def select_counters(site_counters: Mapping[str, Mapping[str, float]],
                     reference: str = "baseline",
                     primary: str = "proposed",

@@ -92,8 +92,20 @@ class ServeConfig:
     paging: "object | None" = None
     # windowed telemetry + online per-site design re-selection
     # (repro.serve.telemetry.TelemetryConfig); requires power_monitor.
-    # None = off. Read results via engine.telemetry_report()
+    # None = off. Read results via engine.telemetry_report(). With
+    # TelemetryConfig(actuate=True) committed flips are applied to the
+    # accountant between steps (closed-loop actuation)
     telemetry: "object | None" = None
+
+    def __post_init__(self):
+        if self.telemetry is not None and not self.power_monitor:
+            raise ValueError(
+                "ServeConfig.telemetry requires ServeConfig."
+                "power_monitor=True: the windowed registry consumes the "
+                "power accountant's retirement records, so telemetry "
+                "without the monitor would observe nothing. Set "
+                "power_monitor=True alongside telemetry=TelemetryConfig"
+                "(...), or drop the telemetry config.")
 
 
 class ServeEngine:
@@ -188,6 +200,8 @@ class ServeEngine:
         self.telemetry = None
         if scfg.telemetry is not None:
             if self.accountant is None:
+                # unreachable via ServeConfig (its __post_init__ rejects
+                # this pairing); kept for hand-built config objects
                 raise ValueError(
                     "ServeConfig.telemetry requires power_monitor=True: "
                     "the windowed registry consumes the accountant's "
@@ -195,6 +209,8 @@ class ServeEngine:
             from .telemetry import ServeTelemetry
             self.telemetry = ServeTelemetry(scfg.telemetry, scfg.monitor)
             self.accountant.retire_hooks.append(self.telemetry.on_retire)
+            if getattr(scfg.telemetry, "actuate", False):
+                self.accountant.enable_actuation()
         weights = (lm.pick_monitor_weights(params)
                    if scfg.power_monitor else [])
         if mesh is not None:
@@ -235,6 +251,7 @@ class ServeEngine:
     def step(self) -> list[Request]:
         """One engine iteration: admit, one shared decode, retire.
         Returns the requests retired during this step."""
+        self._apply_design_swaps()
         retired: list[Request] = []
         self._admission_phase(retired)
         live = self._decode_ready(retired)
@@ -264,6 +281,16 @@ class ServeEngine:
                                           len(live))
         self.stats["steps"] += 1
         return retired
+
+    def _apply_design_swaps(self) -> None:
+        """Commit any design flips the online selector staged since the
+        last step (TelemetryConfig(actuate=True)). Runs at the step
+        boundary, strictly host-side -- the swap only redirects which
+        design future counter recordings are priced under, so no jitted
+        decode ever observes it."""
+        if (self.telemetry is not None
+                and getattr(self.telemetry.tcfg, "actuate", False)):
+            self.telemetry.actuate_pending(self.accountant)
 
     def _admission_phase(self, retired: list[Request]) -> None:
         while self.cache.n_free and self.scheduler.n_pending:
@@ -392,8 +419,13 @@ class ServeEngine:
         if self.accountant is None:
             raise RuntimeError("power_monitor is off")
         from repro.trace.report import build_report
-        return build_report(self.accountant.capture,
-                            model=f"serve/{self.cfg.name}")
+        report = build_report(self.accountant.capture,
+                              model=f"serve/{self.cfg.name}")
+        # closed-loop runs additionally carry the "actuated" pseudo-
+        # design: each site's traffic priced under the design active at
+        # each recording (sums the per-request actuated energies exactly)
+        self.accountant.inject_actuated(report)
+        return report
 
     def telemetry_report(self) -> dict:
         """Finalize and return the telemetry roll-up (windows + flip

@@ -39,6 +39,74 @@ import jax.numpy as jnp
 from repro.core import monitor
 from repro.trace.capture import CaptureConfig, TraceCapture
 
+#: name of the pseudo-design that prices each counter recording under
+#: the design that was ACTIVE when it was recorded (closed-loop online
+#: actuation, repro.serve.telemetry); rides report machinery like
+#: design.select's "selected"
+ACTUATED = "actuated"
+
+#: components an actuated pricing carries: the monitor's energy
+#: components plus the h/v pipeline-toggle counts trace reports quote
+ACTUATED_COMPONENTS = monitor.COMPONENTS + ("h", "v")
+
+
+def _epoch_energy(design: str, counters: dict) -> dict[str, float]:
+    """Price one swap epoch's counter sub-sums under its design."""
+    comps = monitor.counters_to_energy(dict(counters)).get(design, {})
+    out = {c: float(comps.get(c, 0.0)) for c in monitor.COMPONENTS}
+    out["h"] = float(counters.get(f"h/{design}", 0.0))
+    out["v"] = float(counters.get(f"v/{design}", 0.0))
+    return out
+
+
+def actuated_site_energy(record: "SiteRecord",
+                         primary: str) -> dict[str, float]:
+    """Price one frozen site record AS RECORDED: each swap epoch's
+    counter sub-sums under the design that was active when they were
+    recorded (the in-flight attribution rule -- a request spanning a
+    swap is priced under the old design for its pre-swap recordings and
+    the new one after). One shared function for the live accountant and
+    every offline consumer, with one float-addition order, so replays
+    reproduce actuated energies bit for bit. Records without epochs
+    (schema-v1 dumps) price entirely under ``primary``."""
+    epochs = record.epochs or ((primary, record.counters),)
+    total: dict[str, float] | None = None
+    for design, counters in epochs:
+        e = _epoch_energy(design, counters)
+        if total is None:
+            total = e
+        else:
+            for c in total:
+                total[c] += e[c]
+    return total if total is not None else dict.fromkeys(
+        ACTUATED_COMPONENTS, 0.0)
+
+
+def actuated_stream_energy(records, primary: str) -> float:
+    """Total actuated energy (fJ) of a retirement-record stream: per
+    (site, active design) counter sub-sums are merged across the stream
+    FIRST, then priced -- the same sum-counters-then-price grouping the
+    selector's fixed/online window tracks use, so on a swap-free stream
+    the actuated total equals the fixed-primary total bit for bit (each
+    record's single primary epoch carries the identical floats as its
+    flat counters)."""
+    by_site: dict[str, dict[str, dict[str, float]]] = {}
+    for rec in records:
+        for sr in rec.sites:
+            site = by_site.setdefault(sr.site, {})
+            for design, counters in sr.epochs or ((primary, sr.counters),):
+                sub = site.setdefault(design, {})
+                for k, v in counters.items():
+                    if k == "zero_fraction":
+                        continue
+                    sub[k] = sub.get(k, 0.0) + float(v)
+    total = 0.0
+    for site, designs in by_site.items():
+        for design, counters in designs.items():
+            total += float(monitor.counters_to_energy(counters)
+                           .get(design, {}).get("total", 0.0))
+    return total
+
 
 def gather_local(a):
     """Bring a (possibly mesh-sharded) operand onto the default device.
@@ -214,15 +282,25 @@ class SiteRecord:
     kind: str
     shape: tuple[int, ...]
     counters: dict           # flat counters incl. "zero_fraction"
+    #: swap-epoch split of ``counters``: ``((design, sub_counters), ...)``
+    #: where each sub-dict holds the recordings made while that design
+    #: was the site's active choice. Sub-sums are accumulated in the same
+    #: float-addition order as ``counters``, so on a swap-free life the
+    #: single epoch's floats equal ``counters`` bit for bit. Empty on
+    #: records dumped before actuation existed (schema v1).
+    epochs: tuple = ()
 
     def to_json_dict(self) -> dict:
         return {"site": self.site, "kind": self.kind,
-                "shape": list(self.shape), "counters": dict(self.counters)}
+                "shape": list(self.shape), "counters": dict(self.counters),
+                "epochs": [[d, dict(c)] for d, c in self.epochs]}
 
     @classmethod
     def from_json_dict(cls, d: dict) -> "SiteRecord":
         return cls(site=d["site"], kind=d["kind"],
-                   shape=tuple(d["shape"]), counters=dict(d["counters"]))
+                   shape=tuple(d["shape"]), counters=dict(d["counters"]),
+                   epochs=tuple((e[0], dict(e[1]))
+                                for e in d.get("epochs", [])))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -312,12 +390,19 @@ class _SiteRec:
     def __init__(self, shape: tuple[int, int, int, int]):
         self.shape = shape
         self.counters: dict[str, float] = {}
+        # active-design sub-sums (swap epochs): design -> counters added
+        # while that design was the site's choice, accumulated with the
+        # same float-addition order as ``counters`` so a single-design
+        # life's sub-sum IS ``counters`` bit for bit
+        self.priced: dict[str, dict[str, float]] = {}
         self.zf_sum = 0.0
         self.zf_n = 0
 
-    def add(self, counters: dict, zf: float):
+    def add(self, counters: dict, zf: float, design: str):
+        sub = self.priced.setdefault(design, {})
         for k, v in counters.items():
             self.counters[k] = self.counters.get(k, 0.0) + v
+            sub[k] = sub.get(k, 0.0) + v
         self.zf_sum += zf
         self.zf_n += 1
 
@@ -372,6 +457,84 @@ class PowerAccountant:
         # RetirementRecord of every finished request, AFTER its counters
         # were booked into the capture (the telemetry registry's feed)
         self.retire_hooks: list = []
+        # ------------------------------------------ closed-loop actuation
+        # per-site active design (full "prefill/x"/"decode/x" names);
+        # sites absent from the map price under the fixed primary
+        self.actuation_enabled = False
+        self.swap_epoch = 0
+        self._site_design: dict[str, str] = {}
+        self.swap_log: list[tuple[int, dict[str, str]]] = []
+        # request-major actuated totals (retirement order -- the sum of
+        # per-request actuated energies, bit for bit) and site-major
+        # actuated totals (per-site retirement order, for trace-report
+        # injection); both only fed while actuation is enabled
+        self._act_totals: dict[str, float] = dict.fromkeys(
+            ACTUATED_COMPONENTS, 0.0)
+        self._act_sites: dict[str, dict[str, float]] = {}
+
+    # ----------------------------------------------------------- actuation
+    def enable_actuation(self) -> None:
+        """Turn on epoch-priced accounting: every retirement gains an
+        ``"actuated"`` energy entry pricing each recording under the
+        design active when it was made, and :meth:`apply_swaps` becomes
+        legal. Enable before any traffic so the actuated track covers
+        every retired request."""
+        if ACTUATED in self.mcfg.design_names:
+            raise ValueError(
+                f"design name {ACTUATED!r} is reserved for the actuated "
+                f"pricing track; rename the configured design")
+        self.actuation_enabled = True
+
+    def design_for(self, site: str) -> str:
+        """The design currently pricing ``site`` (full
+        ``prefill/...``/``decode/...`` name)."""
+        return self._site_design.get(site, self.mcfg.primary_design)
+
+    def apply_swaps(self, mapping: dict[str, str]) -> int:
+        """Atomically swap the active design of the given sites (full
+        site name -> design). Host-side bookkeeping only -- call it
+        between engine steps, never inside a jitted decode; recordings
+        already accumulated keep their old design (the in-flight
+        attribution rule), subsequent ones price under the new choice.
+        Returns the swap epoch (unchanged if the mapping is a no-op)."""
+        if not self.actuation_enabled:
+            raise RuntimeError(
+                "apply_swaps requires enable_actuation() first")
+        known = set(self.mcfg.design_names)
+        bad = sorted(set(mapping.values()) - known)
+        if bad:
+            raise KeyError(f"unknown designs in swap: {bad}; "
+                           f"configured: {sorted(known)}")
+        changed = {s: d for s, d in mapping.items()
+                   if self.design_for(s) != d}
+        if not changed:
+            return self.swap_epoch
+        self.swap_epoch += 1
+        self._site_design.update(changed)
+        self.swap_log.append((self.swap_epoch, changed))
+        return self.swap_epoch
+
+    def actuated_totals(self) -> dict[str, float]:
+        """Serve-wide actuated energy components: the request-major
+        accumulation, equal bit for bit to summing every retired
+        request's ``energy["actuated"]`` in retirement order."""
+        return dict(self._act_totals)
+
+    def inject_actuated(self, report) -> None:
+        """Add the ``"actuated"`` pseudo-design to a serve-wide
+        :class:`repro.trace.TraceReport` in place, from the site-major
+        actuated sums -- the same floats the per-request reports carry,
+        re-grouped by site in per-site retirement order."""
+        if not self.actuation_enabled:
+            return
+        for s in report.sites:
+            tot = self._act_sites.get(
+                s.name, dict.fromkeys(ACTUATED_COMPONENTS, 0.0))
+            s.designs[ACTUATED] = {"total": tot["total"],
+                                   "streaming": tot["streaming"],
+                                   "h": tot["h"], "v": tot["v"]}
+        if ACTUATED not in report.designs:
+            report.designs = tuple(report.designs) + (ACTUATED,)
 
     # ----------------------------------------------------------- lifecycle
     def begin(self, slot: int, uid: int, prompt_tokens: int) -> None:
@@ -416,7 +579,9 @@ class PowerAccountant:
             zf_n += rec.zf_n
             site_records.append(SiteRecord(
                 site, "dot_general", rec.shape,
-                {**rec.counters, "zero_fraction": rec.zf_mean}))
+                {**rec.counters, "zero_fraction": rec.zf_mean},
+                epochs=tuple((d, dict(sub))
+                             for d, sub in rec.priced.items())))
         for site, rec in acc.decode.items():
             scaled = {k: v * scale for k, v in rec.counters.items()}
             for k, v in scaled.items():
@@ -427,7 +592,11 @@ class PowerAccountant:
             shape = (acc.decode_steps,) + rec.shape[1:]
             site_records.append(SiteRecord(
                 site, "dot_general", shape,
-                {**scaled, "zero_fraction": rec.zf_mean}))
+                {**scaled, "zero_fraction": rec.zf_mean},
+                # epoch sub-sums extrapolate exactly like the totals:
+                # the same per-key float is scaled by the same factor
+                epochs=tuple((d, {k: v * scale for k, v in sub.items()})
+                             for d, sub in rec.priced.items())))
         # ONE frozen per-site record set, booked into the capture AND
         # handed to every retirement hook: the serve-wide report and any
         # windowed view are sums over the identical floats
@@ -447,6 +616,22 @@ class PowerAccountant:
             comps = energy.setdefault(name, {})
             for c in monitor.COMPONENTS:
                 comps.setdefault(c, 0.0)
+        if self.actuation_enabled:
+            # price the request AS RECORDED (each epoch under its active
+            # design), feeding both serve-wide actuated accumulations:
+            # request-major (this request's total, added once) and
+            # site-major (per site, for trace-report injection)
+            req_e = dict.fromkeys(ACTUATED_COMPONENTS, 0.0)
+            for sr in site_records:
+                e = actuated_site_energy(sr, self.mcfg.primary_design)
+                site_tot = self._act_sites.setdefault(
+                    sr.site, dict.fromkeys(ACTUATED_COMPONENTS, 0.0))
+                for c in ACTUATED_COMPONENTS:
+                    req_e[c] += e[c]
+                    site_tot[c] += e[c]
+            for c in ACTUATED_COMPONENTS:
+                self._act_totals[c] += req_e[c]
+            energy[ACTUATED] = {c: req_e[c] for c in monitor.COMPONENTS}
         return RequestPowerReport(
             uid=acc.uid, prompt_tokens=acc.prompt_tokens,
             new_tokens=new_tokens, decode_steps=acc.decode_steps,
@@ -480,16 +665,17 @@ class PowerAccountant:
             m, A.shape[1], weight.shape[1], self.mcfg, sampled_m=ms)
         scaled = {k: v * factor for k, v in counters.items()}
         acc = self._slots[slot]
-        rec = acc.prefill.get(f"prefill/{site}")
+        name = f"prefill/{site}"
+        rec = acc.prefill.get(name)
         if rec is None:
-            rec = acc.prefill[f"prefill/{site}"] = _SiteRec(
+            rec = acc.prefill[name] = _SiteRec(
                 (1, A.shape[0], A.shape[1], weight.shape[1]))
         else:
             # a re-prefill after preemption streams more rows through the
             # same site: grow the booked MAC extent with the energy
             rec.shape = (1, rec.shape[1] + A.shape[0],
                          rec.shape[2], rec.shape[3])
-        rec.add(scaled, zf)
+        rec.add(scaled, zf, self.design_for(name))
 
     def tick(self, slots: list[int]) -> bool:
         """Advance live slots by one decode step; True when this step
@@ -537,10 +723,10 @@ class PowerAccountant:
             factor = monitor.sampled_fraction_scale(
                 1, acts.shape[1], weight.shape[1], self.mcfg)
             scaled = {k: v * factor for k, v in row.items()}
+            name = f"decode/{site}"
             rec = acc.decode.setdefault(
-                f"decode/{site}",
-                _SiteRec((1, 1, acts.shape[1], weight.shape[1])))
-            rec.add(scaled, zf)
+                name, _SiteRec((1, 1, acts.shape[1], weight.shape[1])))
+            rec.add(scaled, zf, self.design_for(name))
 
     def mark_sampled(self, slots: list[int]) -> None:
         """Book that this step's records covered these slots (called once

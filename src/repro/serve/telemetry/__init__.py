@@ -29,12 +29,12 @@ from repro.core import monitor
 from .registry import (TelemetryConfig, Window,       # noqa: F401
                        WindowedRegistry, load_records)
 from .selector import (FlipEvent, OnlineSelector,     # noqa: F401
-                       SelectionTimeline, WindowSelection)
+                       SelectionTimeline, SwapEvent, WindowSelection)
 
 __all__ = [
     "FlipEvent", "OnlineSelector", "SelectionTimeline", "ServeTelemetry",
-    "TelemetryConfig", "Window", "WindowSelection", "WindowedRegistry",
-    "load_records",
+    "SwapEvent", "TelemetryConfig", "Window", "WindowSelection",
+    "WindowedRegistry", "load_records",
 ]
 
 
@@ -59,6 +59,28 @@ class ServeTelemetry:
 
     def on_retire(self, rec) -> None:
         self.registry.observe(rec)
+
+    def actuate_pending(self, accountant) -> "SwapEvent | None":
+        """Drain the selector's staged flips into the accountant -- the
+        engine calls this between steps (host-side; never inside a
+        jitted decode). Returns the logged :class:`SwapEvent`, or None
+        when nothing was staged or the commit was a no-op (e.g. a
+        flip-back to the already-active design)."""
+        from .selector import SwapEvent
+        mapping, deltas, win = self.selector.take_pending()
+        if not mapping:
+            return None
+        changed = {s: d for s, d in mapping.items()
+                   if accountant.design_for(s) != d}
+        if not changed:
+            return None
+        epoch = accountant.apply_swaps(changed)
+        ev = SwapEvent(
+            epoch=epoch, window=win, sites=changed,
+            deltas={s: deltas[s] for s in changed if s in deltas},
+            delta_fj=sum(deltas[s] for s in changed if s in deltas))
+        self.timeline.swaps.append(ev)
+        return ev
 
     @property
     def timeline(self) -> SelectionTimeline:

@@ -47,6 +47,12 @@ def build_parser() -> argparse.ArgumentParser:
                    help="windows an incumbent holds before challengers")
     p.add_argument("--candidates", default="",
                    help="comma-separated design subset to select among")
+    p.add_argument("--actuate", action="store_true",
+                   help="close the loop: apply committed flips to the "
+                        "engine's accountant mid-run (scenario runs; a "
+                        "replay of actuated records reproduces the "
+                        "actuated energy track from the dumped swap "
+                        "epochs regardless of this flag)")
     p.add_argument("--json", metavar="PATH",
                    help="write the timeline JSON here")
     p.add_argument("--csv", metavar="PATH",
@@ -88,7 +94,7 @@ def main(argv=None) -> int:
         tcfg = TelemetryConfig(
             window=args.window or scenario.window, stride=args.stride,
             hysteresis=args.hysteresis, min_dwell=args.min_dwell,
-            candidates=candidates)
+            candidates=candidates, actuate=args.actuate)
         out = run_scenario(scenario, tcfg=tcfg, paged=args.paged,
                            quick=args.quick, seed=args.seed)
         timeline = out["timeline"]

@@ -47,12 +47,18 @@ class TelemetryConfig:
     the designs the selector chooses among (default: every design in
     the monitor's list, reference included -- "encode nothing" is a
     legitimate choice).
+
+    ``actuate=True`` closes the loop: committed flips are APPLIED to the
+    engine's accountant at the next step boundary, so subsequently
+    recorded traffic prices under the flipped choice (swap epochs; see
+    docs/observability.md "Closed-loop actuation").
     """
     window: int = 8
     stride: int | None = None        # None -> window (tumbling)
     hysteresis: float = 0.0
     min_dwell: int = 1
     candidates: tuple[str, ...] = ()
+    actuate: bool = False
 
     def __post_init__(self):
         if self.window < 1:
@@ -194,18 +200,33 @@ class WindowedRegistry:
         return closed
 
     def flush(self) -> list[Window]:
-        """Close every still-open window as partial (end of run); fires
-        their hooks. Idempotent; the registry accepts no retirements
-        afterwards."""
+        """Close still-open windows as partial (end of run); fires their
+        hooks. Idempotent (a second flush is a no-op returning ``[]``);
+        the registry accepts no retirements afterwards.
+
+        Sliding geometries (``stride < window``) can leave SEVERAL open
+        tail windows whose record sets nest: with window=4/stride=2 and
+        5 retirements, both [2,3,4] and [4] are open. Closing every one
+        would hand the selector seq 4 twice with no new information --
+        the tail retirements double-count into two partial windows. Only
+        open windows that cover at least one retirement no already-closed
+        window covers are closed; pure-subset tails are dropped."""
         if self._flushed:
             return []
         self._flushed = True
-        closed = []
+        covered = {s for w in self.windows if w.closed for s in w.seqs}
+        closed, survivors = [], []
         for w in self.windows:
-            if not w.closed:
+            if w.closed:
+                survivors.append(w)
+                continue
+            if any(s not in covered for s in w.seqs):
                 w.closed = w.partial = True
-                if w.records:
-                    closed.append(w)
+                covered.update(w.seqs)
+                survivors.append(w)
+                closed.append(w)
+            # else: drop -- every record already lives in a closed window
+        self.windows = survivors
         for w in closed:
             for hook in self.on_window:
                 hook(w)
@@ -242,7 +263,7 @@ class WindowedRegistry:
         counter values -- offline what-if sweeps over window / stride /
         hysteresis need no re-serve."""
         payload = {
-            "schema": "repro.serve.telemetry/records/v1",
+            "schema": "repro.serve.telemetry/records/v2",
             "designs": list(self.mcfg.design_names),
             "reference": self.mcfg.reference_design,
             "primary": self.mcfg.primary_design,
@@ -258,7 +279,10 @@ def load_records(path: str) -> tuple[dict, list[RetirementRecord]]:
     counters were priced for."""
     with open(path) as f:
         payload = json.load(f)
-    if payload.get("schema") != "repro.serve.telemetry/records/v1":
+    # v2 added per-record swap epochs; v1 dumps load with empty epochs
+    # (every record then prices under the fixed primary on replay)
+    if payload.get("schema") not in ("repro.serve.telemetry/records/v1",
+                                     "repro.serve.telemetry/records/v2"):
         raise ValueError(
             f"{path}: not a telemetry records file "
             f"(schema={payload.get('schema')!r})")

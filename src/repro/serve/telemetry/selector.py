@@ -31,7 +31,8 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import monitor
-from repro.design.select import select_counters
+from repro.design.select import select_counters, swap_deltas
+from repro.serve.power import actuated_stream_energy
 
 from .registry import TelemetryConfig, Window
 
@@ -50,6 +51,21 @@ class FlipEvent:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass(frozen=True)
+class SwapEvent:
+    """One ACTUATED design swap: the commit of a window's staged flips
+    into the engine's accountant, at the next step boundary."""
+    epoch: int                   # accountant swap epoch after the commit
+    window: int                  # last window whose flips were staged
+    sites: dict                  # site -> newly active design
+    deltas: dict                 # site -> fJ delta (new - old) priced on
+                                 # the window that drove the flip
+    delta_fj: float              # sum of deltas (negative = cheaper)
+
+    def to_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
 @dataclasses.dataclass
 class WindowSelection:
     """The selector's outcome for one closed window."""
@@ -61,10 +77,11 @@ class WindowSelection:
     raw_choices: dict[str, str]  # site -> this window's raw greedy winner
     flips: list[FlipEvent]
     energy: dict[str, float]     # per-design window totals (fJ), summed
-                                 # over sites, plus "online"
+                                 # over sites, plus "online"/"actuated"
     saving_fixed: float          # fixed primary vs reference, this window
     saving_online: float         # online choices vs reference
     saving_oracle: float = float("nan")   # filled by finalize()
+    saving_actuated: float = float("nan")  # epoch-priced (as-recorded)
 
     def to_json_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -80,6 +97,7 @@ class SelectionTimeline:
     candidates: tuple[str, ...]
     windows: list[WindowSelection] = dataclasses.field(default_factory=list)
     oracle_choices: dict[str, str] = dataclasses.field(default_factory=dict)
+    swaps: list[SwapEvent] = dataclasses.field(default_factory=list)
 
     @property
     def flip_events(self) -> list[FlipEvent]:
@@ -88,6 +106,10 @@ class SelectionTimeline:
     @property
     def n_flips(self) -> int:
         return len(self.flip_events)
+
+    @property
+    def n_swaps(self) -> int:
+        return len(self.swaps)
 
     def dwell_times(self) -> dict[str, list[tuple[str, int]]]:
         """Per site: the run-length encoding of its choice across
@@ -113,6 +135,7 @@ class SelectionTimeline:
             "n_windows": len(self.windows),
             "n_requests": sum(w.n_requests for w in self.windows),
             "n_flips": self.n_flips,
+            "n_swaps": self.n_swaps,
             "sites": sorted({s for w in self.windows for s in w.choices}),
             "reference": self.reference,
             "primary": self.primary,
@@ -121,6 +144,7 @@ class SelectionTimeline:
         if self.windows:
             out["saving_fixed"] = self._mean_saving(self.primary)
             out["saving_online"] = self._mean_saving("online")
+            out["saving_actuated"] = self._mean_saving("actuated")
             if self.oracle_choices:
                 out["saving_oracle"] = self._mean_saving("oracle")
                 out["oracle_choices"] = dict(self.oracle_choices)
@@ -128,11 +152,12 @@ class SelectionTimeline:
 
     def to_json_dict(self) -> dict:
         return {
-            "schema": "repro.serve.telemetry/timeline/v1",
+            "schema": "repro.serve.telemetry/timeline/v2",
             "summary": self.summary(),
             "dwell": {site: [list(run) for run in runs]
                       for site, runs in self.dwell_times().items()},
             "flips": [f.to_json_dict() for f in self.flip_events],
+            "swaps": [s.to_json_dict() for s in self.swaps],
             "windows": [w.to_json_dict() for w in self.windows],
         }
 
@@ -146,7 +171,7 @@ class SelectionTimeline:
         from repro.trace.report import write_csv
         cols = ("window", "n_requests", "partial", "site", "choice",
                 "raw_winner", "flipped_from", "saving_fixed",
-                "saving_online", "saving_oracle")
+                "saving_online", "saving_oracle", "saving_actuated")
         rows = []
         for w in self.windows:
             flipped = {f.site: f.old for f in w.flips}
@@ -154,7 +179,8 @@ class SelectionTimeline:
                 rows.append((w.window, w.n_requests, int(w.partial), site,
                              w.choices[site], w.raw_choices[site],
                              flipped.get(site, ""), w.saving_fixed,
-                             w.saving_online, w.saving_oracle))
+                             w.saving_online, w.saving_oracle,
+                             w.saving_actuated))
         write_csv(path, cols, rows)
 
     def table(self, max_windows: int = 24) -> str:
@@ -183,11 +209,15 @@ class SelectionTimeline:
         lines.append("-" * len(hdr))
         tail = (f"{sm['n_windows']} windows, {sm['n_requests']} requests, "
                 f"{sm['n_flips']} flips")
+        if self.swaps:
+            tail += f", {len(self.swaps)} swaps"
         if "saving_online" in sm:
             tail += (f" | saving fixed {sm['saving_fixed'] * 100:.2f}% / "
                      f"online {sm['saving_online'] * 100:.2f}%")
             if "saving_oracle" in sm:
                 tail += f" / oracle {sm['saving_oracle'] * 100:.2f}%"
+            if self.swaps:
+                tail += f" / actuated {sm['saving_actuated'] * 100:.2f}%"
         lines.append(tail)
         return "\n".join(lines)
 
@@ -219,6 +249,24 @@ class OnlineSelector:
             candidates=self.candidates)
         self._current: dict[str, str] = {}   # site -> incumbent design
         self._dwell: dict[str, int] = {}     # consecutive windows held
+        # staged-but-not-yet-applied flips (tcfg.actuate only): the
+        # engine drains these at its next step boundary via take_pending
+        self._pending: dict[str, str] = {}
+        self._pending_old: dict[str, str] = {}
+        self._pending_deltas: dict[str, float] = {}
+        self._pending_window = -1
+
+    # ---------------------------------------------------------- actuation
+    def take_pending(self) -> tuple[dict[str, str], dict[str, float], int]:
+        """Drain the staged flips: ``(site -> new design, site -> fJ
+        delta on the staging window, last staging window index)``.
+        Empty mapping when nothing is staged."""
+        out = (dict(self._pending), dict(self._pending_deltas),
+               self._pending_window)
+        self._pending.clear()
+        self._pending_old.clear()
+        self._pending_deltas.clear()
+        return out
 
     # ------------------------------------------------------------ windows
     def observe(self, window: Window) -> WindowSelection:
@@ -228,11 +276,12 @@ class OnlineSelector:
                               candidates=self.candidates)
         # every priced design's per-site window total (not just the
         # candidates: the fixed/reference tracks need theirs too)
+        priced = {site: monitor.counters_to_energy(dict(c))
+                  for site, c in counters.items()}
         energies = {
             site: {name: float(comps["total"])
-                   for name, comps in
-                   monitor.counters_to_energy(dict(c)).items()}
-            for site, c in counters.items()}
+                   for name, comps in designs.items()}
+            for site, designs in priced.items()}
         flips: list[FlipEvent] = []
         choices: dict[str, str] = {}
         for site, raw in sel.choices.items():
@@ -260,14 +309,32 @@ class OnlineSelector:
         energy = {name: sum(e[name] for e in energies.values())
                   for name in names}
         energy["online"] = sum(energies[s][choices[s]] for s in choices)
+        # the AS-RECORDED track: each record's swap epochs priced under
+        # the design active when its counters were recorded. Grouped
+        # counters-first like the fixed track, so on swap-free traffic
+        # (actuation off, or no commit yet) it equals fixed bit-exactly.
+        energy["actuated"] = actuated_stream_energy(window.records,
+                                                    self.primary)
         ref = max(energy[self.reference], 1e-30)
+        if self.tcfg.actuate and flips:
+            # stage the committed flips for the engine's next step
+            # boundary, priced on the window that drove them
+            old = {f.site: self._pending_old.get(f.site, f.old)
+                   for f in flips}
+            new = {f.site: f.new for f in flips}
+            for site, d in swap_deltas(priced, old, new).items():
+                self._pending_deltas[site] = d
+            self._pending.update(new)
+            self._pending_old.update(old)
+            self._pending_window = window.index
         ws = WindowSelection(
             window=window.index, n_requests=window.n_requests,
             new_tokens=window.new_tokens, partial=window.partial,
             choices=choices, raw_choices=dict(sel.choices), flips=flips,
             energy=energy,
             saving_fixed=1.0 - energy[self.primary] / ref,
-            saving_online=1.0 - energy["online"] / ref)
+            saving_online=1.0 - energy["online"] / ref,
+            saving_actuated=1.0 - energy["actuated"] / ref)
         self.timeline.windows.append(ws)
         return ws
 

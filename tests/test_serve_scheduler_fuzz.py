@@ -301,11 +301,12 @@ def _model():
     return _MODEL
 
 
-def _paged_engine(pages, rows=3, classes=()):
+def _paged_engine(pages, rows=3, classes=(), chunk=0, prefix=False):
     cfg, params = _model()
     return ServeEngine(params, cfg, ServeConfig(
         cache_len=48, paging=PagingConfig(
             page_size=8, num_pages=pages, max_rows=rows,
+            prefill_chunk=chunk, prefix_cache=prefix,
             classes=classes)))
 
 
@@ -353,3 +354,62 @@ def test_cancel_frees_all_pages_under_churn(seed):
     assert eng.cache.n_free_pages == 16 - 1
     for i in cancel:
         assert reqs[i].done
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_cancel_churn_chunked_prefill_prefix_conservation(seed):
+    """Cancel-during-chunked-prefill churn: chunked prefill + hash-consed
+    prefix sharing + a tight pool (preemption pressure), with requests
+    cancelled at random steps -- including mid-chunk and while holding
+    shared-prefix pins. Afterwards the page pool must conserve exactly
+    (free + prefix-cached == allocatable) and every trie node's refcount
+    must be back to zero: a cancelled mid-chunk request freed its
+    page-table pages AND decref'd the prefix pages it pinned at
+    admission."""
+    rng = np.random.default_rng(seed)
+    eng = _paged_engine(13, rows=3, chunk=8, prefix=True)
+    base = list(map(int, rng.integers(0, 256, 16)))   # shared 2-page stem
+    reqs = []
+    for _ in range(6):
+        tail = list(map(int, rng.integers(0, 256, int(rng.integers(4, 18)))))
+        reqs.append(eng.submit(base + tail, max_new_tokens=5))
+    alive = list(reqs)
+    while eng.scheduler.n_pending or eng.cache.n_live:
+        eng.step()
+        if alive and rng.random() < 0.5:
+            victim = alive.pop(int(rng.integers(0, len(alive))))
+            eng.cancel(victim.uid)
+    eng.run()
+    assert eng.cache.n_live == 0
+    assert eng.cache.n_free_pages + len(eng.prefix) == 13 - 1
+    assert all(n.refs == 0 for n in eng.prefix._by_page.values())
+    for r in reqs:
+        assert r.done
+
+
+def test_cancel_mid_chunk_releases_prefix_pins():
+    """Directed regression for the cancel-during-chunked-prefill path: a
+    first request pays for and inserts a shared prefix; a second request
+    matches it (pinning the trie chain) and is cancelled while its
+    chunked prefill is still in flight. The cancel must drop the trie
+    refcounts to zero and return every non-shared page, leaving the pool
+    at free + cached == allocatable with the prefix still reusable."""
+    eng = _paged_engine(16, rows=2, chunk=8, prefix=True)
+    base = list(range(100, 116))                      # 2 full pages
+    first = eng.submit(base + [1, 2, 3], max_new_tokens=3)
+    eng.run()
+    assert first.done and len(eng.prefix) == 2
+    pool_after_first = eng.cache.n_free_pages
+
+    second = eng.submit(base + list(range(30, 54)), max_new_tokens=4)
+    eng.step()                                        # admit: chunk 1 only
+    assert second.status.name == "RUNNING"
+    assert any(n.refs > 0 for n in eng.prefix._by_page.values()), \
+        "second request should be pinning the shared prefix mid-chunk"
+    assert eng.cancel(second.uid)
+    assert second.done and second.finish_reason == "cancelled"
+    assert all(n.refs == 0 for n in eng.prefix._by_page.values())
+    assert eng.cache.n_free_pages == pool_after_first
+    assert eng.cache.n_free_pages + len(eng.prefix) == 16 - 1
+    eng.run()

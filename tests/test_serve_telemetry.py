@@ -218,11 +218,15 @@ def test_config_validation():
 
 
 def test_telemetry_requires_power_monitor():
-    cfg = SMOKES["qwen1.5-0.5b"].with_(compute_dtype="float32")
-    params = lm.init_model(jax.random.key(0), cfg)
-    with pytest.raises(ValueError, match="power_monitor"):
-        ServeEngine(params, cfg, ServeConfig(
-            max_slots=2, cache_len=48, telemetry=TelemetryConfig()))
+    """The telemetry/power_monitor pairing is validated at CONFIG
+    construction (not at first engine step), and the error names both
+    fields so the fix is obvious from the message alone."""
+    with pytest.raises(ValueError) as ei:
+        ServeConfig(max_slots=2, cache_len=48,
+                    telemetry=TelemetryConfig())
+    msg = str(ei.value)
+    assert "ServeConfig.telemetry" in msg
+    assert "power_monitor=True" in msg
 
 
 # ----------------------------------------------------- replay / serde
@@ -265,8 +269,9 @@ def test_telemetry_report_shape(shift_run):
     assert rep["n_retired"] == sum(w["n_requests"]
                                    for w in rep["windows"])
     tl = rep["timeline"]
-    assert tl["schema"] == "repro.serve.telemetry/timeline/v1"
+    assert tl["schema"] == "repro.serve.telemetry/timeline/v2"
     assert tl["summary"]["n_flips"] == len(tl["flips"])
+    assert tl["summary"]["n_swaps"] == len(tl["swaps"]) == 0
 
 
 # ------------------------------------------------- selection coherence
@@ -304,6 +309,272 @@ def test_moe_drift_scenario_serves():
     assert _report_bytes(reg.merged_report(
         model=f"serve/{out['engine'].cfg.name}")) \
         == _report_bytes(out["engine"].trace_report())
+
+
+# ------------------------------------------------------ flush edge cases
+def _bare_rec(uid: int):
+    from repro.serve.power import RetirementRecord
+    return RetirementRecord(uid=uid, prompt_tokens=1, new_tokens=1,
+                            decode_steps=1, sampled_steps=1, sites=())
+
+
+def test_flush_is_idempotent():
+    """A second flush is a no-op: no windows returned, no hooks fired,
+    no state change (regression: double-finalize paths must not feed the
+    selector the tail twice)."""
+    reg = WindowedRegistry(TelemetryConfig(window=3))
+    fired = []
+    reg.on_window.append(lambda w: fired.append(w.index))
+    for i in range(4):
+        reg.observe(_bare_rec(i))
+    first = reg.flush()
+    assert [w.index for w in first] == [1] and fired == [0, 1]
+    n_windows = len(reg.windows)
+    assert reg.flush() == []
+    assert fired == [0, 1] and len(reg.windows) == n_windows
+
+
+def test_flush_sliding_tail_no_double_count():
+    """Regression: with stride < window, flush used to close EVERY open
+    tail window as partial -- nested tails like [2,3,4] and [4] then
+    double-counted the last retirements into two partial windows. Only
+    tails contributing uncovered retirements may close; pure subsets of
+    already-closed coverage are dropped."""
+    reg = WindowedRegistry(TelemetryConfig(window=4, stride=2))
+    for i in range(5):
+        reg.observe(_bare_rec(i))
+    closed = reg.flush()
+    # exactly one partial tail ([2,3,4]); the subset tail [4] is dropped
+    assert [(w.seqs, w.partial) for w in closed] == [([2, 3, 4], True)]
+    partial_cover = [s for w in reg.windows if w.partial for s in w.seqs]
+    assert len(partial_cover) == len(set(partial_cover))
+    # and the partition is still lossless: every retirement closed once+
+    assert {s for w in reg.windows for s in w.seqs} == set(range(5))
+
+
+# -------------------------------------------- finalize edge-case tracks
+def test_finalize_zero_flip_oracle_equals_fixed(shift_records):
+    """With a single candidate (the fixed primary) no flip is possible
+    and hindsight has no freedom: the oracle track must equal the fixed
+    track BIT-exactly, per window and in the run summary."""
+    records, mcfg = shift_records
+    tl = _replay(records, mcfg, window=4, candidates=("proposed",))
+    assert tl.n_flips == 0
+    for w in tl.windows:
+        assert w.energy["oracle"] == w.energy["proposed"]
+        assert w.saving_oracle == w.saving_fixed
+    sm = tl.summary()
+    assert sm["saving_oracle"] == sm["saving_fixed"]
+
+
+def test_finalize_single_window_run(shift_records):
+    """A window larger than the whole run yields one partial window; all
+    savings ratios stay finite (no division by zero) and the oracle
+    equals the online pick (one window of hindsight = one window of
+    causality)."""
+    records, mcfg = shift_records
+    tl = _replay(records, mcfg, window=10 ** 6)
+    assert len(tl.windows) == 1 and tl.windows[0].partial
+    sm = tl.summary()
+    for k in ("saving_fixed", "saving_online", "saving_oracle",
+              "saving_actuated"):
+        assert sm[k] == sm[k] and abs(sm[k]) < 1.0   # finite, sane
+    assert tl.windows[0].energy["oracle"] == tl.windows[0].energy["online"]
+
+
+def test_finalize_empty_registry():
+    """Finalizing with zero retirements crashes nothing and reports an
+    empty timeline."""
+    from repro.serve.telemetry.scenarios import scenario_monitor
+    telem = ServeTelemetry(TelemetryConfig(window=4), scenario_monitor())
+    tl = telem.finalize()
+    assert tl.windows == [] and tl.n_flips == 0
+    sm = tl.summary()
+    assert sm["n_windows"] == 0 and "saving_fixed" not in sm
+
+
+# ------------------------------------------------- closed-loop actuation
+@pytest.fixture(scope="module")
+def actuated_run():
+    """The shift scenario with the loop CLOSED: window=2 so the sparse->
+    dense flip commits mid-run and later traffic prices under the
+    swapped design."""
+    return run_scenario("shift",
+                        tcfg=TelemetryConfig(window=2, actuate=True),
+                        quick=True)
+
+
+def test_actuated_swap_commits_mid_run(actuated_run):
+    """The scripted flip is actually APPLIED: at least one swap epoch,
+    committed before the run ends, with a negative energy delta (the new
+    design was cheaper on the window that drove it), and the accountant's
+    active choice reflects it."""
+    tl = actuated_run["timeline"]
+    acc = actuated_run["engine"].accountant
+    assert tl.n_swaps >= 1 and acc.swap_log
+    last_window = tl.windows[-1].window
+    for ev in tl.swaps:
+        assert ev.epoch >= 1
+        assert ev.window < last_window          # mid-run, not at flush
+        assert ev.delta_fj < 0
+        assert set(ev.deltas) == set(ev.sites)
+        for site, design in ev.sites.items():
+            assert acc.design_for(site) == design != "proposed"
+
+
+def test_actuated_request_sum_bitexact(actuated_run):
+    """Per-request actuated energies sum BIT-exactly to the accountant's
+    serve-wide actuated totals, across the swap boundary -- requests in
+    flight during the swap are split by epoch, never re-priced."""
+    acc = actuated_run["engine"].accountant
+    totals = acc.actuated_totals()
+    finished = actuated_run["finished"]
+    for comp in ("total", "streaming"):
+        s = sum(r.power.energy["actuated"][comp] for r in finished)
+        assert s == totals[comp]
+
+
+def test_in_flight_swap_splits_epochs():
+    """The in-flight attribution rule, directly on the accountant: a
+    request live ACROSS apply_swaps keeps its pre-swap recordings under
+    the old design and prices later ones under the new -- two epochs in
+    the frozen record, summing exactly to the flat counters, and the
+    request's actuated energy matching neither pure design."""
+    import jax.numpy as jnp
+    from repro.serve.power import PowerAccountant, actuated_site_energy
+    acc = PowerAccountant(scenario_monitor())
+    acc.enable_actuation()
+    retired = []
+    acc.retire_hooks.append(retired.append)
+    A = jax.random.normal(jax.random.key(0), (1, 32), jnp.float32)
+    W = jax.random.normal(jax.random.key(1), (32, 48), jnp.float32)
+    acc.begin(0, uid=7, prompt_tokens=0)
+    acc.tick([0])
+    acc.record_decode([0], A, W, "x")
+    acc.mark_sampled([0])
+    assert acc.apply_swaps({"decode/x": "baseline"}) == 1
+    acc.tick([0])
+    acc.record_decode([0], 2.0 * A, W, "x")
+    acc.mark_sampled([0])
+    rep = acc.finish(0, new_tokens=2)
+    (ret,) = retired
+    (sr,) = ret.sites
+    assert [d for d, _ in sr.epochs] == ["proposed", "baseline"]
+    for k, v in sr.counters.items():
+        if k != "zero_fraction":
+            assert sum(c.get(k, 0.0)
+                       for _, c in sr.epochs) == pytest.approx(v)
+    e = actuated_site_energy(sr, "proposed")
+    assert rep.energy["actuated"]["total"] == e["total"]
+    assert e["total"] != rep.energy["proposed"]["total"]
+    assert e["total"] != rep.energy["baseline"]["total"]
+
+
+def test_actuated_trace_report_injection(actuated_run):
+    """trace_report() carries the 'actuated' pseudo-design whose per-site
+    energies equal the per-site retirement-order recomputation from the
+    frozen records bit for bit -- and the swap made the serve-wide
+    actuated total strictly cheaper than the fixed primary."""
+    from repro.serve.power import actuated_site_energy
+    eng = actuated_run["engine"]
+    rep = eng.trace_report()
+    assert "actuated" in rep.designs
+    per_site: dict = {}
+    for rec in eng.telemetry.registry.records:
+        for sr in rec.sites:
+            e = actuated_site_energy(sr, "proposed")
+            per_site[sr.site] = per_site.get(sr.site, 0.0) + e["total"]
+    for s in rep.sites:
+        assert s.designs["actuated"]["total"] == per_site[s.name]
+    act = sum(s.designs["actuated"]["total"] for s in rep.sites)
+    fixed = sum(s.designs["proposed"]["total"] for s in rep.sites)
+    assert act < fixed
+
+
+def test_actuated_replay_bitexact(actuated_run, tmp_path):
+    """CLI replay of the dumped records reproduces the actuated energy
+    track bit-exactly: the swap epochs travel WITH the records, so no
+    engine or accountant is needed to re-price the run as it happened."""
+    eng = actuated_run["engine"]
+    rec_path = tmp_path / "act_records.json"
+    eng.telemetry.registry.dump_records(str(rec_path))
+
+    from repro.serve.telemetry.__main__ import main as cli_main
+    out = tmp_path / "act_timeline.json"
+    assert cli_main(["--replay", str(rec_path), "--window", "2",
+                     "--json", str(out)]) == 0
+    replayed = json.loads(out.read_text())["windows"]
+    direct = actuated_run["timeline"].windows
+    assert len(replayed) == len(direct)
+    for got, want in zip(replayed, direct):
+        assert got["energy"]["actuated"] == want.energy["actuated"]
+        assert got["saving_actuated"] == want.saving_actuated
+
+
+def test_actuated_vs_reported_differential(actuated_run, tmp_path):
+    """Actuation is pricing bookkeeping only: replaying the same record
+    stream with actuate on and off yields identical choices, flips, and
+    energy tracks (the selector's decisions cannot depend on the knob)."""
+    reg = actuated_run["engine"].telemetry.registry
+    records, mcfg = reg.records, reg.mcfg
+    on = _replay(records, mcfg, window=2, actuate=True)
+    off = _replay(records, mcfg, window=2, actuate=False)
+    assert [w.choices for w in on.windows] == \
+        [w.choices for w in off.windows]
+    assert [w.raw_choices for w in on.windows] == \
+        [w.raw_choices for w in off.windows]
+    assert [w.energy for w in on.windows] == \
+        [w.energy for w in off.windows]
+
+
+def test_zero_swap_actuated_equals_fixed(shift_run):
+    """With the loop open (actuate=False) every recording prices under
+    the fixed primary, so the actuated track IS the fixed track, bit for
+    bit, in every window."""
+    for w in shift_run["timeline"].windows:
+        assert w.energy["actuated"] == w.energy["proposed"]
+        assert w.saving_actuated == w.saving_fixed
+
+
+def test_apply_swaps_validation():
+    """The accountant's swap API: actuation must be enabled first,
+    unknown designs are rejected, and no-op swaps do not burn an epoch."""
+    from repro.serve.power import PowerAccountant
+    acc = PowerAccountant(scenario_monitor())
+    with pytest.raises(RuntimeError, match="enable_actuation"):
+        acc.apply_swaps({"decode/x": "baseline"})
+    acc.enable_actuation()
+    with pytest.raises(KeyError, match="unknown designs"):
+        acc.apply_swaps({"decode/x": "nope"})
+    assert acc.apply_swaps({}) == 0
+    assert acc.apply_swaps({"decode/x": acc.mcfg.primary_design}) == 0
+    assert acc.apply_swaps({"decode/x": "baseline"}) == 1
+    assert acc.design_for("decode/x") == "baseline"
+    assert acc.design_for("decode/y") == acc.mcfg.primary_design
+
+
+def test_actuated_site_energy_epochs():
+    """Epoch pricing is 'each sub-sum under its own design': a synthetic
+    two-epoch record prices as old-design pre-swap energy plus new-design
+    post-swap energy; records without epochs fall back to the primary."""
+    from repro.serve.power import SiteRecord, actuated_site_energy
+    pre = {"e/baseline/total": 10.0, "e/proposed/total": 6.0,
+           "h/baseline": 4.0, "v/baseline": 4.0,
+           "h/proposed": 3.0, "v/proposed": 2.0}
+    post = {"e/baseline/total": 20.0, "e/proposed/total": 11.0,
+            "h/baseline": 8.0, "v/baseline": 8.0,
+            "h/proposed": 5.0, "v/proposed": 4.0}
+    both = {k: pre[k] + post[k] for k in pre}
+    rec = SiteRecord("decode/x", "dot_general", (1, 1, 4, 4), both,
+                     epochs=(("proposed", pre), ("baseline", post)))
+    e = actuated_site_energy(rec, "proposed")
+    assert e["total"] == 6.0 + 20.0        # proposed pre + baseline post
+    assert e["h"] == 3.0 + 8.0 and e["v"] == 2.0 + 8.0
+    legacy = SiteRecord("decode/x", "dot_general", (1, 1, 4, 4), both)
+    assert actuated_site_energy(legacy, "proposed")["total"] == 6.0 + 11.0
+    # JSON round-trip preserves the epochs exactly
+    again = SiteRecord.from_json_dict(rec.to_json_dict())
+    assert again.epochs == rec.epochs
 
 
 def test_scenario_registry_consistency():

@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""Validate benchmark CI artifacts against their committed JSON schemas.
+
+The BENCH_*.json artifacts (written by ``make paging-smoke`` /
+``kernels-smoke`` / ``telemetry-smoke`` via
+:func:`benchmarks.common.emit_artifact`) are the machine-readable
+contract between this repo and anything that trends its numbers. A cell
+silently renamed or dropped is a broken downstream dashboard; this
+check turns that into a red CI step.
+
+Zero dependencies on purpose: this is a minimal recursive validator for
+the JSON-schema subset the schemas under ``schemas/`` actually use --
+``type`` (name or list), ``required``, ``properties``,
+``patternProperties``, ``additionalProperties`` (bool or schema),
+``items``, ``enum``, ``const``, ``minimum``/``maximum``, ``minItems``,
+``$ref`` (document-local ``#/...`` pointers only). Anything else in a
+schema is an error, not a silent pass.
+
+Usage::
+
+    python tools/check_bench_schema.py BENCH_serve.json [BENCH_online.json ...]
+    python tools/check_bench_schema.py --schema schemas/x.schema.json FILE
+
+Without ``--schema``, each artifact is matched to
+``schemas/bench_<name>.schema.json`` by its ``BENCH_<name>.json``
+filename. Exits non-zero listing every violation with its JSON path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "integer": int,
+    "number": (int, float),
+    "boolean": bool,
+    "null": type(None),
+}
+_KNOWN_KEYS = {
+    "$schema", "$ref", "title", "description", "definitions",
+    "type", "required", "properties", "patternProperties",
+    "additionalProperties", "items", "enum", "const",
+    "minimum", "maximum", "minItems",
+}
+
+
+def _resolve_ref(ref: str, root: dict) -> dict:
+    if not ref.startswith("#/"):
+        raise ValueError(f"only document-local $ref supported: {ref!r}")
+    node = root
+    for part in ref[2:].split("/"):
+        node = node[part.replace("~1", "/").replace("~0", "~")]
+    return node
+
+
+def _type_ok(value, name: str) -> bool:
+    py = _TYPES[name]
+    if isinstance(value, bool):            # bool is an int subclass in
+        return name == "boolean"           # Python; JSON keeps them apart
+    return isinstance(value, py)
+
+
+def validate(value, schema: dict, root: dict, path: str,
+             errors: list[str]) -> None:
+    """Append a message to *errors* for every violation under *path*."""
+    if "$ref" in schema:
+        validate(value, _resolve_ref(schema["$ref"], root), root, path,
+                 errors)
+        return
+    unknown = set(schema) - _KNOWN_KEYS
+    if unknown:
+        raise ValueError(
+            f"schema at {path or '$'} uses unsupported keywords "
+            f"{sorted(unknown)} -- extend tools/check_bench_schema.py")
+
+    loc = path or "$"
+    if "type" in schema:
+        names = schema["type"]
+        names = [names] if isinstance(names, str) else names
+        if not any(_type_ok(value, n) for n in names):
+            errors.append(f"{loc}: expected {'/'.join(names)}, got "
+                          f"{type(value).__name__}")
+            return                          # structural keywords would
+                                            # just cascade noise
+    if "const" in schema and value != schema["const"]:
+        errors.append(f"{loc}: expected const {schema['const']!r}, "
+                      f"got {value!r}")
+    if "enum" in schema and value not in schema["enum"]:
+        errors.append(f"{loc}: {value!r} not in enum {schema['enum']!r}")
+
+    if isinstance(value, (int, float)) and not isinstance(value, bool):
+        if "minimum" in schema and value < schema["minimum"]:
+            errors.append(f"{loc}: {value} < minimum {schema['minimum']}")
+        if "maximum" in schema and value > schema["maximum"]:
+            errors.append(f"{loc}: {value} > maximum {schema['maximum']}")
+
+    if isinstance(value, dict):
+        for key in schema.get("required", ()):
+            if key not in value:
+                errors.append(f"{loc}: missing required key {key!r}")
+        props = schema.get("properties", {})
+        patterns = schema.get("patternProperties", {})
+        extra = schema.get("additionalProperties", True)
+        for key, item in value.items():
+            sub = f"{path}.{key}" if path else key
+            matched = False
+            if key in props:
+                matched = True
+                validate(item, props[key], root, sub, errors)
+            for pat, pschema in patterns.items():
+                if re.search(pat, key):
+                    matched = True
+                    validate(item, pschema, root, sub, errors)
+            if matched:
+                continue
+            if extra is False:
+                errors.append(f"{loc}: unexpected key {key!r}")
+            elif isinstance(extra, dict):
+                validate(item, extra, root, sub, errors)
+
+    if isinstance(value, list):
+        if "minItems" in schema and len(value) < schema["minItems"]:
+            errors.append(f"{loc}: {len(value)} items < minItems "
+                          f"{schema['minItems']}")
+        if "items" in schema:
+            for i, item in enumerate(value):
+                validate(item, schema["items"], root, f"{path}[{i}]",
+                         errors)
+
+
+def check_file(artifact: Path, schema_path: Path) -> list[str]:
+    schema = json.loads(schema_path.read_text())
+    value = json.loads(artifact.read_text())
+    errors: list[str] = []
+    validate(value, schema, schema, "", errors)
+    return errors
+
+
+def default_schema(artifact: Path, schema_dir: Path) -> Path:
+    m = re.fullmatch(r"BENCH_(\w+)\.json", artifact.name)
+    if not m:
+        raise SystemExit(
+            f"{artifact}: cannot infer schema from filename (expected "
+            f"BENCH_<name>.json); pass --schema explicitly")
+    return schema_dir / f"bench_{m.group(1)}.schema.json"
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("artifacts", nargs="+", type=Path,
+                   metavar="BENCH_x.json")
+    p.add_argument("--schema", type=Path, default=None,
+                   help="explicit schema (single artifact only)")
+    p.add_argument("--schema-dir", type=Path,
+                   default=Path(__file__).resolve().parent.parent
+                   / "schemas")
+    args = p.parse_args(argv)
+    if args.schema and len(args.artifacts) > 1:
+        p.error("--schema only applies to a single artifact")
+
+    failed = False
+    for artifact in args.artifacts:
+        schema = args.schema or default_schema(artifact, args.schema_dir)
+        if not artifact.exists():
+            print(f"FAIL {artifact}: artifact not found (run the "
+                  f"emitting benchmark first)")
+            failed = True
+            continue
+        errors = check_file(artifact, schema)
+        if errors:
+            failed = True
+            print(f"FAIL {artifact} vs {schema.name}:")
+            for e in errors:
+                print(f"  {e}")
+        else:
+            print(f"ok   {artifact} vs {schema.name}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
