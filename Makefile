@@ -5,8 +5,9 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test kernel-test kernels-test multidevice-test trace-smoke \
-	serve-smoke design-smoke paging-smoke kernels-smoke telemetry-smoke \
-	moe-smoke schema-check kernels-schema-check bench-quick ci
+	serve-smoke design-smoke sweep-smoke paging-smoke kernels-smoke \
+	telemetry-smoke moe-smoke schema-check kernels-schema-check \
+	bench-quick ci
 
 # tier-1: the whole test suite, fail fast, with the 15 slowest tests
 # reported so suite-runtime regressions are visible in every CI log
@@ -54,6 +55,13 @@ design-smoke:
 	$(PY) benchmarks/run.py --quick --only bic_variants
 	$(PY) -m repro.trace --archs '' --nets resnet50 --res 64 --select
 
+# end-to-end smoke of the design-space autotuner: price the full
+# geometry x coding x precision x approx grid (>= 200 points) over a
+# traced CNN in one batched pass, check the pareto front against the
+# recorded goldens, and write the structured-JSON CI artifact
+sweep-smoke:
+	$(PY) -m benchmarks.design_sweep --quick --emit-json BENCH_sweep.json
+
 # end-to-end smoke of the block-paged serving engine: equal-HBM
 # concurrency, chunked prefill, prefix reuse and power overhead cells,
 # writing the structured-JSON CI artifact
@@ -82,7 +90,8 @@ moe-smoke:
 # cell is a broken downstream consumer, so it must be a red CI step.
 # Runs after the smokes that emit the artifacts.
 schema-check:
-	$(PY) tools/check_bench_schema.py BENCH_serve.json BENCH_online.json
+	$(PY) tools/check_bench_schema.py BENCH_serve.json BENCH_online.json \
+	    BENCH_sweep.json
 
 # same, for the artifact the kernels CI job emits (kernels-smoke)
 kernels-schema-check:
@@ -91,5 +100,5 @@ kernels-schema-check:
 bench-quick: trace-smoke
 	$(PY) -m benchmarks.serve_throughput --quick
 
-ci: test trace-smoke serve-smoke design-smoke paging-smoke telemetry-smoke \
-	moe-smoke schema-check
+ci: test trace-smoke serve-smoke design-smoke sweep-smoke paging-smoke \
+	telemetry-smoke moe-smoke schema-check

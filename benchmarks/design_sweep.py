@@ -1,0 +1,138 @@
+"""Design-space sweep benchmark: price the full autotuner grid, check
+the pareto front against recorded goldens.
+
+One cell, ``design_sweep``: trace the workloads once
+(:func:`repro.design.sweep.collect_sites`), then time the warm pricing
+of the whole geometry x coding x precision x approx grid -- a single
+:func:`repro.design.evaluate_batched` pass over every traced site. The
+derived column reports grid size, pricing throughput, the pareto front,
+and the headline "widening the design space beats the paper's fixed
+proposed design" statistics.
+
+The run SystemExits when the front regresses against the recorded
+goldens (floors chosen with slack under both ``--quick`` and full
+grids):
+
+* some non-square or sub-bf16 point must beat the fixed proposed
+  design on streaming energy by >= 30% (observed ~39%),
+* >= 100 such points must beat it at all (observed 172 quick / 224
+  full),
+* the front must contain an EXACT (accuracy-proxy 0) point saving
+  >= 5% total energy (observed ~9%, bic-west\\@bf16) and a sub-bf16
+  point saving >= 30% (observed ~42%),
+* the front must stay small (<= 24 points) -- a front spanning half the
+  grid means domination collapsed (e.g. the accuracy proxy went
+  degenerate).
+
+Run:  PYTHONPATH=src python -m benchmarks.design_sweep [--quick]
+      [--emit-json BENCH_sweep.json]
+"""
+from __future__ import annotations
+
+from .common import benchmark_cli, emit_artifact, row, timed
+
+#: regression floors for the pareto front (see module docstring)
+GOLDENS = {
+    "min_best_streaming_vs_fixed": 0.30,
+    "min_beats_fixed": 100,
+    "min_front": 2,
+    "max_front": 24,
+    "min_exact_front_saving": 0.05,
+    "min_sub_bf16_saving": 0.30,
+}
+
+
+def check_goldens(rep) -> list[str]:
+    """Golden checks on a :class:`repro.design.sweep.SweepReport`;
+    returns the list of failures (empty when the front is healthy)."""
+    fails = []
+    g = GOLDENS
+    front = [rep.rows[i] for i in rep.front]
+    if not (g["min_front"] <= len(front) <= g["max_front"]):
+        fails.append(f"front size {len(front)} outside "
+                     f"[{g['min_front']}, {g['max_front']}]")
+    if len(rep.beats_fixed) < g["min_beats_fixed"]:
+        fails.append(f"only {len(rep.beats_fixed)} non-square/sub-bf16 "
+                     f"points beat the fixed design on streaming "
+                     f"energy (golden >= {g['min_beats_fixed']})")
+    best_vs_fixed = max((r["streaming_vs_fixed"] for r in rep.rows
+                         if r["name"] in set(rep.beats_fixed)),
+                       default=0.0)
+    if best_vs_fixed < g["min_best_streaming_vs_fixed"]:
+        fails.append(f"best streaming saving vs the fixed design "
+                     f"{best_vs_fixed * 100:.1f}% below golden "
+                     f"{g['min_best_streaming_vs_fixed'] * 100:.0f}%")
+    exact = [r for r in front if r["accuracy_proxy"] == 0.0]
+    if not exact or max(r["saving_total"] for r in exact) \
+            < g["min_exact_front_saving"]:
+        fails.append("no exact (accuracy-proxy 0) front point saves "
+                     f">= {g['min_exact_front_saving'] * 100:.0f}% "
+                     "total energy")
+    lossy = [r for r in front if r["precision"] != "bf16"]
+    if not lossy or max(r["saving_total"] for r in lossy) \
+            < g["min_sub_bf16_saving"]:
+        fails.append("no sub-bf16 front point saves >= "
+                     f"{g['min_sub_bf16_saving'] * 100:.0f}% total "
+                     "energy")
+    return fails
+
+
+def main(quick: bool = False, emit_json: str | None = None) -> None:
+    from repro.design.sweep import (GEOMETRIES, QUICK_GEOMETRIES,
+                                    build_sweep_report, collect_sites,
+                                    sweep_grid)
+
+    if quick:
+        geoms, nets, archs, sample = (QUICK_GEOMETRIES, ("resnet50",), (),
+                                      (64, 64, 64))
+    else:
+        geoms, nets, archs, sample = (GEOMETRIES, ("resnet50",),
+                                      ("qwen1.5-0.5b",), (96, 96, 96))
+    designs = sweep_grid(geometries=geoms)
+    sites, trace_us = timed(
+        lambda: collect_sites(nets=nets, archs=archs, res=64,
+                              sample=sample),
+        warmup=0, iters=1)
+    rep, price_us = timed(
+        lambda: build_sweep_report(sites, designs), warmup=1, iters=1)
+    fails = check_goldens(rep)
+
+    best_vs_fixed = max((r["streaming_vs_fixed"] for r in rep.rows
+                         if r["name"] in set(rep.beats_fixed)),
+                        default=0.0)
+    row("design_sweep", price_us,
+        f"{len(designs)} points x {rep.n_sites} sites priced warm in "
+        f"{price_us / 1e6:.1f}s "
+        f"({len(designs) * rep.n_sites / (price_us / 1e6):.0f} "
+        f"site-points/s) / front {len(rep.front)} / "
+        f"{len(rep.beats_fixed)} beat fixed on streaming "
+        f"(best {best_vs_fixed * 100:.1f}%)"
+        + (f" / GOLDEN FAIL x{len(fails)}" if fails else ""))
+    print("# " + "\n# ".join(rep.table().splitlines()))
+
+    if emit_json:
+        emit_artifact(
+            emit_json,
+            {"design_sweep": {
+                "n_points": len(designs),
+                "n_sites": rep.n_sites,
+                "sample": list(rep.sample),
+                "trace_wall_s": trace_us / 1e6,
+                "price_wall_s": price_us / 1e6,
+                "reference": rep.reference,
+                "fixed": rep.fixed,
+                "front": [rep.rows[i] for i in rep.front],
+                "beats_fixed_streaming": list(rep.beats_fixed),
+                "best_streaming_vs_fixed": best_vs_fixed,
+                "golden_failures": fails,
+                "rows": rep.rows,
+            }},
+            quick=quick, goldens=GOLDENS)
+
+    if fails:
+        raise SystemExit("design-sweep pareto front regressed vs "
+                         "goldens:\n  - " + "\n  - ".join(fails))
+
+
+if __name__ == "__main__":
+    benchmark_cli(main)

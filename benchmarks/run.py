@@ -22,10 +22,10 @@ if __package__ in (None, ""):                 # script invocation: put the
     sys.path.insert(0, _ROOT)                        # the path ourselves
 
 from benchmarks import (activity_reduction, bic_variants, counter_kernels,
-                        fig2_distributions, fig45_per_layer, overall_savings,
-                        overhead_scaling, power_monitor_lm, serve_kernels,
-                        serve_online, serve_paging, serve_throughput,
-                        trace_full_model)
+                        design_sweep, fig2_distributions, fig45_per_layer,
+                        overall_savings, overhead_scaling, power_monitor_lm,
+                        serve_kernels, serve_online, serve_paging,
+                        serve_throughput, trace_full_model)
 
 #: name -> (main fn, accepts quick=...). EVERY benchmark module must be
 #: registered here -- tests/test_serve_engine.py asserts the registry
@@ -34,6 +34,7 @@ SUITES = {
     "fig2_distributions": (fig2_distributions.main, False),
     "bic_variants": (bic_variants.main, True),
     "counter_kernels": (counter_kernels.main, True),
+    "design_sweep": (design_sweep.main, True),
     "fig45_per_layer": (fig45_per_layer.main, False),
     "overall_savings": (overall_savings.main, False),
     "overhead_scaling": (overhead_scaling.main, False),

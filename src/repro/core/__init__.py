@@ -1,7 +1,8 @@
 """Core of the reproduction: bus-invert coding, zero-value clock gating,
 switching-activity accounting, the output-stationary systolic-array streaming
 model, and the calibrated dynamic-power model."""
-from . import activity, bic, bits, monitor, power, systolic, zvg  # noqa: F401
+from . import (activity, bic, bits, monitor, power, precision,  # noqa: F401
+               systolic, zvg)
 from .bic import bic_decode, bic_encode, bic_transitions  # noqa: F401
 from .monitor import MonitorConfig, monitor_matmul  # noqa: F401
 from .power import DEFAULT_ENERGY, EnergyModel, sa_power  # noqa: F401

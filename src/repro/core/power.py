@@ -64,6 +64,11 @@ class EnergyModel:
     E_ENC: float = 60.0           # mantissa BIC encoder, per word
     E_DEC_XOR_BIT: float = 0.8    # per decoded-bit toggle at each PE
     MANT_FRAC: float = 7.0 / 16.0  # mantissa share of weight-bus toggles
+    # Operand-format normalisers of the multiplier model (mantissa field
+    # width and physical bus width). bf16 defaults; precision-scaled
+    # models (repro.core.precision.scale_energy) override both.
+    MANT_BITS: float = 7.0
+    BUS_BITS: float = 16.0
     # Un-gateable baseline loads (cap the achievable savings, per real flows):
     E_CTRL_CYCLE: float = 160.0    # sequencing/mux control per PE per cycle
     CLK_LEAF_FRAC: float = 0.18   # share of clock power at gateable leaf pins
@@ -87,8 +92,8 @@ def _mult_energy(em: EnergyModel, slots, tog_a, tog_b, mtog_a, mtog_b):
     """
     static = em.MULT_STATIC_FRAC * em.E_MULT * slots
     dyn_budget = (1.0 - em.MULT_STATIC_FRAC) * em.E_MULT
-    pp = em.MULT_PP_FRAC * dyn_budget * (mtog_a + mtog_b) / 7.0
-    exp = (1.0 - em.MULT_PP_FRAC) * dyn_budget * (tog_a + tog_b) / 16.0
+    pp = em.MULT_PP_FRAC * dyn_budget * (mtog_a + mtog_b) / em.MANT_BITS
+    exp = (1.0 - em.MULT_PP_FRAC) * dyn_budget * (tog_a + tog_b) / em.BUS_BITS
     return static + pp + exp
 
 

@@ -1,0 +1,168 @@
+"""Arithmetic precision formats for the design-space sweep.
+
+The paper prices one bf16 array; reduced-precision pipelines (fp8-e4m3,
+int8) change BOTH sides of the power trade -- narrower buses toggle
+less and multiply cheaper, but quantization injects numerical error.
+This module makes the format a first-class design axis without touching
+the counter kernels: every format's words are *embedded* into the
+``uint16`` bus layout the :mod:`repro.kernels.power_counters` kernels
+already count, placed so the kernels' hard-coded field masks keep
+meaning the right thing:
+
+* ``bf16``     -- the native layout, bit-identical to the PR-seed path
+  (``[sign:15][exp:14..7][mant:6..0]``).
+* ``fp8e4m3``  -- ``sign -> bit 15``, the 4 exponent bits ``-> 10..7``,
+  the 3 mantissa bits ``-> 2..0`` (a sparse bf16-like layout). The
+  kernel's mantissa mask ``0x007F`` then counts exactly the fp8
+  mantissa toggles (bits 3..6 never set), and its ``word & 0x7FFF``
+  zero test treats fp8 ``-0.0`` (embedded ``0x8000``) as zero, exactly
+  like bf16. Per-bit XOR popcounts are placement-invariant, so the
+  embedded stream's transition counts ARE the 8-bit bus's counts.
+* ``int8``     -- the two's-complement byte in the low 8 bits
+  (identity embedding; this is the int8 counter path the fused kernels
+  have exercised since they landed). ``0x007F`` counts the 7
+  low/magnitude bits, the sign rides bit 7, and zero embeds as
+  ``0x0000``. Quantization is per-tensor symmetric absmax to
+  ``[-127, 127]`` (``-128`` excluded so negation stays in range).
+
+:func:`scale_energy` derives a precision-scaled
+:class:`~repro.core.power.EnergyModel` (multiplier/adder energies, bus
+widths, per-PE register bits, detector/encoder costs) -- for ``bf16``
+it returns the input model object UNCHANGED, so every existing bf16
+pricing path stays float-identical. ``quant_rms`` is the format's
+relative-RMS quantization-error proxy feeding the sweep's
+accuracy-proxy column (bf16 is the accuracy reference, proxy 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import bits as B
+from .power import EnergyModel
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """One arithmetic format, as seen by the 16-bit counter machinery.
+
+    ``segments`` maps the canonical coding-scheme names to BIC segment
+    mask tuples IN THE EMBEDDED LAYOUT (disjoint, ``seg_key``-able);
+    formats without a field (int8 has no exponent) simply omit the
+    scheme. ``quant_rms`` is the relative-RMS quantization error proxy
+    (round-to-nearest on ``m`` mantissa bits gives ``2**-m / (2*sqrt(3))``
+    per value; int8's per-tensor absmax scaling lands near the same
+    formula on the magnitude bits, inflated for the dynamic range a
+    single scale cannot track).
+    """
+    name: str
+    bits: int             # physical bus width
+    mant_bits: int        # mantissa / magnitude field width
+    segments: dict[str, tuple[int, ...]]
+    quant_rms: float      # relative-RMS quantization error proxy
+    mult_scale: float     # E_MULT scale vs the bf16 multiplier
+    add_scale: float      # E_ADD scale (accumulation stays 32-bit)
+
+
+PRECISIONS: dict[str, Precision] = {
+    "bf16": Precision(
+        name="bf16", bits=16, mant_bits=7,
+        segments={"mantissa": (0x007F,),
+                  "mant_exp": (0x007F, 0x7F80),
+                  "full": (0xFFFF,)},
+        quant_rms=0.0,                    # the accuracy reference
+        mult_scale=1.0, add_scale=1.0),
+    "fp8e4m3": Precision(
+        name="fp8e4m3", bits=8, mant_bits=3,
+        segments={"mantissa": (0x0007,),
+                  "mant_exp": (0x0007, 0x0780),
+                  "full": (0x8787,)},
+        quant_rms=2.0 ** -3 / (2.0 * 3.0 ** 0.5),    # ~0.036
+        mult_scale=0.25, add_scale=0.6),
+    "int8": Precision(
+        name="int8", bits=8, mant_bits=7,
+        segments={"mantissa": (0x007F,),
+                  "full": (0x00FF,)},
+        # 1/127 step at absmax; x4 for the headroom one per-tensor
+        # scale leaves on typically-distributed operands
+        quant_rms=4.0 / 127.0 / (2.0 * 3.0 ** 0.5),  # ~0.009
+        mult_scale=0.20, add_scale=0.45),
+}
+
+
+def get(name: str) -> Precision:
+    if name not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {name!r}; choose from {sorted(PRECISIONS)}")
+    return PRECISIONS[name]
+
+
+# --------------------------------------------------------- quantize + embed
+def _fp8e4m3_bits(x: jax.Array) -> jax.Array:
+    """fp8-e4m3 round + embed. The input is clamped to the format's
+    +-448 max first: jax's ``astype(float8_e4m3fn)`` saturates overflow
+    to NaN (0x7F), which would silently count a garbage word."""
+    f = jnp.clip(x.astype(jnp.float32), -448.0, 448.0)
+    b = jax.lax.bitcast_convert_type(
+        f.astype(jnp.float8_e4m3fn), jnp.uint8).astype(jnp.uint16)
+    sign = (b >> 7) & 0x1
+    exp = (b >> 3) & 0xF
+    mant = b & 0x7
+    return ((sign << 15) | (exp << 7) | mant).astype(jnp.uint16)
+
+
+def _int8_bits(x: jax.Array) -> jax.Array:
+    """Per-tensor symmetric absmax int8 quantization, low-byte embed."""
+    f = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(f))
+    scale = jnp.where(absmax > 0.0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(f / scale), -127.0, 127.0).astype(jnp.int8)
+    return jax.lax.bitcast_convert_type(q, jnp.uint8).astype(jnp.uint16)
+
+
+def quantize_bits(x: jax.Array, precision: str | Precision) -> jax.Array:
+    """Quantize ``x`` to the format and return the embedded ``uint16``
+    bus words (same shape). ``bf16`` is exactly
+    :func:`repro.core.bits.to_bits` -- the seed path."""
+    name = precision.name if isinstance(precision, Precision) else precision
+    if name == "bf16":
+        return B.to_bits(x)
+    if name == "fp8e4m3":
+        return _fp8e4m3_bits(x)
+    if name == "int8":
+        return _int8_bits(x)
+    raise ValueError(
+        f"unknown precision {name!r}; choose from {sorted(PRECISIONS)}")
+
+
+# ----------------------------------------------------------- energy scaling
+def scale_energy(em: EnergyModel, precision: str | Precision) -> EnergyModel:
+    """Precision-scaled :class:`EnergyModel`.
+
+    For ``bf16`` the INPUT OBJECT is returned unchanged (identity), so
+    bf16 pricing is bitwise what it was before the precision axis
+    existed. For 8-bit formats: the multiplier/adder energies shrink by
+    the format's scale, each operand register loses 8 flop-bits
+    (72 -> 56 per PE; the 32-bit accumulator and control stay), the
+    gateable-leaf share drops by the 8 input-register bits (42 -> 34),
+    the zero detector and BIC encoder work on half the bits, and the
+    mantissa/bus-width normalisers of the multiplier model follow the
+    format's fields.
+    """
+    p = precision if isinstance(precision, Precision) else get(precision)
+    if p.name == "bf16":
+        return em
+    shrink = float(16 - p.bits)            # per-operand register bits saved
+    return dataclasses.replace(
+        em,
+        E_MULT=em.E_MULT * p.mult_scale,
+        E_ADD=em.E_ADD * p.add_scale,
+        REG_BITS_PER_PE=em.REG_BITS_PER_PE - 2.0 * shrink,
+        GATEABLE_BITS_PER_PE=em.GATEABLE_BITS_PER_PE - shrink,
+        E_ZDET=em.E_ZDET * p.bits / 16.0,
+        E_ENC=em.E_ENC * p.bits / 16.0,
+        MANT_FRAC=p.mant_bits / p.bits,
+        MANT_BITS=float(p.mant_bits),
+        BUS_BITS=float(p.bits))

@@ -34,9 +34,22 @@ from . import activity, bic
 @dataclasses.dataclass(frozen=True)
 class SAGeometry:
     """Systolic array geometry. The paper evaluates 16x16; the TPU MXU is
-    128x128 of the same dataflow family."""
+    128x128 of the same dataflow family. Non-square (tall/wide) shapes
+    are first-class: rows/cols set the per-edge lane counts, padding,
+    fill/drain cycles and unload depth independently."""
     rows: int = 16
     cols: int = 16
+
+    def __post_init__(self):
+        # normalise numpy/bool-free int-likes so equal geometries hash
+        # equally as jit static args, then fail degenerate shapes loudly
+        # (rows=0 would "price" as an empty array, negatives as nonsense)
+        object.__setattr__(self, "rows", int(self.rows))
+        object.__setattr__(self, "cols", int(self.cols))
+        if self.rows < 1 or self.cols < 1:
+            raise ValueError(
+                f"SAGeometry needs rows >= 1 and cols >= 1, got "
+                f"{self.rows}x{self.cols}")
 
 
 PAPER_SA = SAGeometry(16, 16)
@@ -168,7 +181,7 @@ def stream_facts(geom: SAGeometry, M: int, K: int, N: int,
 
 @partial(jax.jit, static_argnames=("geom", "west_bic", "north_bic",
                                    "west_zvg", "north_zvg", "backend",
-                                   "interpret"))
+                                   "interpret", "precision"))
 def sa_design_report(A: jax.Array, Bm: jax.Array,
                      geom: SAGeometry = PAPER_SA,
                      west_bic: tuple[tuple[int, ...], ...] = (),
@@ -177,7 +190,8 @@ def sa_design_report(A: jax.Array, Bm: jax.Array,
                      west_zvg: bool = True,
                      north_zvg: bool = False,
                      backend: str | None = None,
-                     interpret: bool | None = None) -> dict:
+                     interpret: bool | None = None,
+                     precision: str = "bf16") -> dict:
     """Coding-agnostic stream counters for one tiled matmul on the SA.
 
     One fused pass per operand edge computes a *menu* of counters --
@@ -201,22 +215,36 @@ def sa_design_report(A: jax.Array, Bm: jax.Array,
         bit-identical (differential-tested), so this only moves the
         compute.
       interpret: force/suppress Pallas interpret mode (None = auto).
+      precision: operand format -- ``"bf16"`` (the native path) or an
+        8-bit format from :mod:`repro.core.precision` (``"fp8e4m3"`` /
+        ``"int8"``), whose words are quantized and *embedded* into the
+        16-bit bus layout the counter kernels count (per-bit XOR
+        popcounts are placement-invariant, so the embedded counts are
+        the narrow bus's counts). Segment variants must be given in the
+        embedded layout (:attr:`repro.core.precision.Precision.segments`).
 
     Returns a flat dict of f32 scalars (f32 to avoid int32 overflow on
     large layers; relative error < 1e-6 at these magnitudes).
     """
     R, C = geom.rows, geom.cols
-    A = A.astype(jnp.bfloat16)
-    Bm = Bm.astype(jnp.bfloat16)
     M, K = A.shape
     K2, N = Bm.shape
     assert K == K2, (A.shape, Bm.shape)
 
-    Ap = _pad_to(A, R, 0)          # [M', K]
-    Bp = _pad_to(Bm, C, 1)         # [K, N']
-
-    a_bits = activity.matrix_stream_bits(Ap, axis=1)       # [K, M']
-    b_bits = activity.matrix_stream_bits(Bp, axis=0)       # [K, N']
+    if precision == "bf16":
+        Ap = _pad_to(A.astype(jnp.bfloat16), R, 0)         # [M', K]
+        Bp = _pad_to(Bm.astype(jnp.bfloat16), C, 1)        # [K, N']
+        a_bits = activity.matrix_stream_bits(Ap, axis=1)   # [K, M']
+        b_bits = activity.matrix_stream_bits(Bp, axis=0)   # [K, N']
+    else:
+        from . import precision as prec
+        p = prec.get(precision)
+        # quantize BEFORE padding (the int8 absmax scale must see only
+        # real data); the embedded zero word is 0x0000 for every
+        # format, so zero-padding the bit matrix pads zero values
+        a_bits = jnp.moveaxis(_pad_to(prec.quantize_bits(A, p), R, 0),
+                              1, 0)                        # [K, M']
+        b_bits = _pad_to(prec.quantize_bits(Bm, p), C, 1)  # [K, N']
     out, az_rows = _edge_menu(a_bits, "w", tuple(west_bic), west_zvg,
                               backend, interpret)
     n_menu, nz_rows = _edge_menu(b_bits, "n", tuple(north_bic), north_zvg,

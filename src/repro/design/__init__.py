@@ -26,15 +26,17 @@ from __future__ import annotations
 from .evaluate import (design_energy, evaluate, evaluate_batched,
                        evaluate_operands, menu_args, savings)
 from .point import (BIC, NONE, PAPER_BASELINE, PAPER_PAIR, PAPER_PROPOSED,
-                    ZVG, Coding, DesignPoint, named_designs, paper_pair,
-                    resolve_designs)
-from .select import SELECTED, Selection, apply_selection, select_sites
+                    ZVG, ApproxPE, Coding, DesignPoint, named_designs,
+                    paper_pair, resolve_designs)
+from .select import (SELECTED, Selection, apply_selection, pareto_front,
+                     select_sites)
 
 __all__ = [
-    "Coding", "DesignPoint", "BIC", "ZVG", "NONE",
+    "Coding", "DesignPoint", "ApproxPE", "BIC", "ZVG", "NONE",
     "PAPER_BASELINE", "PAPER_PROPOSED", "PAPER_PAIR",
     "paper_pair", "named_designs", "resolve_designs",
     "design_energy", "evaluate", "evaluate_operands", "evaluate_batched",
     "menu_args", "savings",
     "Selection", "SELECTED", "select_sites", "apply_selection",
+    "pareto_front",
 ]

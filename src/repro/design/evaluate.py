@@ -38,13 +38,15 @@ def _check_names(designs: Sequence[DesignPoint]) -> None:
 
 
 def menu_args(designs: Sequence[DesignPoint]
-              ) -> dict[systolic.SAGeometry, dict]:
-    """Static :func:`sa_design_report` arguments per geometry: the union
-    of menu entries the designs need, grouped by the geometry they share
-    a stream pass with."""
-    groups: dict[systolic.SAGeometry, dict] = {}
+              ) -> dict[tuple[systolic.SAGeometry, str], dict]:
+    """Static :func:`sa_design_report` arguments per stream group: the
+    union of menu entries the designs need, grouped by the
+    ``(geometry, precision)`` pair they share a stream pass with
+    (padding depends on geometry and the streamed words depend on the
+    operand format, so either difference is a different stream)."""
+    groups: dict[tuple[systolic.SAGeometry, str], dict] = {}
     for d in designs:
-        g = groups.setdefault(d.geometry, {
+        g = groups.setdefault((d.geometry, d.precision), {
             "west_bic": [], "north_bic": [],
             "west_zvg": False, "north_zvg": False})
         for edge, c in (("west", d.west), ("north", d.north)):
@@ -54,11 +56,11 @@ def menu_args(designs: Sequence[DesignPoint]
                 g[f"{edge}_zvg"] = True
     # sorted variant tuples -> design-list order never changes the static
     # jit cache key of the underlying sa_design_report
-    return {geom: {"west_bic": tuple(sorted(g["west_bic"])),
-                   "north_bic": tuple(sorted(g["north_bic"])),
-                   "west_zvg": g["west_zvg"],
-                   "north_zvg": g["north_zvg"]}
-            for geom, g in groups.items()}
+    return {key: {"west_bic": tuple(sorted(g["west_bic"])),
+                  "north_bic": tuple(sorted(g["north_bic"])),
+                  "west_zvg": g["west_zvg"],
+                  "north_zvg": g["north_zvg"]}
+            for key, g in groups.items()}
 
 
 def _edge_toggles(report: dict, prefix: str, c: Coding):
@@ -90,10 +92,12 @@ def design_energy(report: dict, design: DesignPoint) -> dict:
     Returns ``{"energy": {component: fJ, ..., "total": fJ},
     "h": horizontal-pipeline toggles, "v": vertical-pipeline toggles,
     "cycles": ..., "zero_fraction": ...}``. The menu must have been built
-    for ``design.geometry`` with this design's codings included (see
-    :func:`menu_args`); a missing entry raises ``KeyError``.
+    for ``design.geometry`` AND ``design.precision`` with this design's
+    codings included (see :func:`menu_args`); a missing coding entry
+    raises ``KeyError`` (a wrong-precision menu cannot be detected here
+    -- route mixed lists through :func:`evaluate_operands`).
     """
-    em = design.energy
+    em = design.priced_energy()
     cw, cn = design.west, design.north
     R, C = design.geometry.rows, design.geometry.cols
     Mp, Np = report["Mp"], report["Np"]
@@ -167,6 +171,12 @@ def evaluate(report: dict, designs: Sequence[DesignPoint]) -> dict:
             f"evaluate() prices one stream pass; designs span geometries "
             f"{sorted((g.rows, g.cols) for g in geoms)} -- use "
             f"evaluate_operands()")
+    precisions = {d.precision for d in designs}
+    if len(precisions) > 1:
+        raise ValueError(
+            f"evaluate() prices one stream pass; designs span precisions "
+            f"{sorted(precisions)} (different operand formats are "
+            f"different streams) -- use evaluate_operands()")
     return {d.name: design_energy(report, d) for d in designs}
 
 
@@ -175,40 +185,65 @@ def evaluate_operands(A: jax.Array, W: jax.Array,
                       backend: str | None = None) -> dict:
     """Stream ``[M,K] x [K,N]`` operands and price every design.
 
-    One :func:`sa_design_report` pass per distinct geometry (with the
-    union of the group's menu needs); every design is then priced from
-    its group's menu. jit-compatible for a static design tuple.
-    ``backend`` selects the counter implementation (fused Pallas kernel
-    vs pure-JAX reference; bit-identical, see
-    :mod:`repro.kernels.power_counters`).
+    One :func:`sa_design_report` pass per distinct
+    ``(geometry, precision)`` group (with the union of the group's menu
+    needs); every design is then priced from its group's menu.
+    jit-compatible for a static design tuple. ``backend`` selects the
+    counter implementation (fused Pallas kernel vs pure-JAX reference;
+    bit-identical, see :mod:`repro.kernels.power_counters`).
     """
     _check_names(designs)
     out: dict = {}
-    for geom, kw in menu_args(designs).items():
-        menu = systolic.sa_design_report(A, W, geom, backend=backend, **kw)
+    for (geom, precision), kw in menu_args(designs).items():
+        menu = systolic.sa_design_report(A, W, geom, backend=backend,
+                                         precision=precision, **kw)
         for d in designs:
-            if d.geometry == geom:
+            if d.geometry == geom and d.precision == precision:
                 out[d.name] = design_energy(menu, d)
     return out
 
 
 def evaluate_batched(A3: jax.Array, W3: jax.Array,
                      designs: Sequence[DesignPoint],
-                     backend: str | None = None) -> dict:
+                     backend: str | None = None,
+                     weights: jax.Array | None = None) -> dict:
     """Batched form: ``[B,M,K] x [B,K,N]`` independent problems (grouped
     convolutions, batched dot_generals), energies summed over B and the
-    non-additive scalars averaged/kept consistent."""
+    non-additive scalars averaged/kept consistent.
+
+    ``weights`` (``[B]``, optional) scales every extensive quantity of
+    problem ``b`` (energies, toggles, cycles) before the sum -- the
+    sweep's estimated-full-cost path, where each batch entry is a
+    *sampled* site and its weight is the full-site/sample MAC ratio.
+    ``zero_fraction`` becomes the weights-weighted mean. Omitting
+    ``weights`` is the exact pre-existing unweighted sum.
+    """
     designs = tuple(designs)
     per = jax.vmap(
         lambda a, w: evaluate_operands(a, w, designs, backend))(A3, W3)
+    if weights is not None:
+        wts = jnp.asarray(weights, jnp.float32)
+        if wts.shape != (A3.shape[0],):
+            raise ValueError(
+                f"weights must be [B]={A3.shape[0]}, got {wts.shape}")
+        wsum = jnp.maximum(wts.sum(), 1e-30)
     out = {}
     for name, r in per.items():
-        out[name] = {
-            "energy": {k: v.sum() for k, v in r["energy"].items()},
-            "h": r["h"].sum(), "v": r["v"].sum(),
-            "cycles": r["cycles"].sum(),
-            "zero_fraction": r["zero_fraction"].mean(),
-        }
+        if weights is None:
+            out[name] = {
+                "energy": {k: v.sum() for k, v in r["energy"].items()},
+                "h": r["h"].sum(), "v": r["v"].sum(),
+                "cycles": r["cycles"].sum(),
+                "zero_fraction": r["zero_fraction"].mean(),
+            }
+        else:
+            out[name] = {
+                "energy": {k: (v * wts).sum()
+                           for k, v in r["energy"].items()},
+                "h": (r["h"] * wts).sum(), "v": (r["v"] * wts).sum(),
+                "cycles": (r["cycles"] * wts).sum(),
+                "zero_fraction": (r["zero_fraction"] * wts).sum() / wsum,
+            }
     return out
 
 

@@ -20,9 +20,11 @@ pair, which is why design-keyed dicts with names ``"baseline"`` /
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 from repro.core import bic
+from repro.core import precision as prec
 from repro.core.power import DEFAULT_ENERGY, EnergyModel
 from repro.core.systolic import PAPER_SA, SAGeometry
 
@@ -60,6 +62,30 @@ NONE = Coding()
 ZVG = Coding(zvg=True)
 
 
+@dataclasses.dataclass(frozen=True)
+class ApproxPE:
+    """Approximate-multiplier axis of a design point.
+
+    ``mult_discount`` is the fraction of multiplier energy the
+    approximate PE saves (applied to ``E_MULT`` only -- the multiplier
+    is the sole consumer); ``rel_rms_error`` is the injected
+    product-error model, a relative-RMS error per product, which feeds
+    the design's accuracy proxy (root-sum-squared with the precision's
+    quantization error). Frozen and hashable so it rides through jit
+    static arguments like everything else in a :class:`DesignPoint`.
+    """
+    mult_discount: float = 0.0
+    rel_rms_error: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.mult_discount < 1.0:
+            raise ValueError(
+                f"mult_discount must be in [0, 1), got {self.mult_discount}")
+        if self.rel_rms_error < 0.0:
+            raise ValueError(
+                f"rel_rms_error must be >= 0, got {self.rel_rms_error}")
+
+
 def BIC(segments: Sequence[int] = bic.MANTISSA_ONLY, zvg: bool = False
         ) -> Coding:
     """BIC with the given segment masks, optionally stacked with ZVG."""
@@ -79,22 +105,55 @@ class DesignPoint:
     north: Coding = NONE      # weight edge
     geometry: SAGeometry = PAPER_SA
     energy: EnergyModel = DEFAULT_ENERGY
+    precision: str = "bf16"   # operand format (repro.core.precision)
+    approx: ApproxPE | None = None
 
     def __post_init__(self):
-        if not self.name or "/" in self.name or "," in self.name:
+        if (not self.name or "/" in self.name or "," in self.name
+                or any(ch.isspace() or not ch.isprintable()
+                       for ch in self.name)):
             raise ValueError(
                 f"design name {self.name!r} must be non-empty and free of "
-                f"'/' and ',' (it namespaces flat counter keys and CLI "
-                f"lists)")
+                f"'/', ',', whitespace and control characters (it "
+                f"namespaces flat counter keys and rides unquoted through "
+                f"CSV rows and CLI lists)")
+        prec.get(self.precision)   # fail unknown formats at construction
 
     def with_(self, **kw) -> "DesignPoint":
         return dataclasses.replace(self, **kw)
 
+    def priced_energy(self) -> EnergyModel:
+        """The energy model this design is actually priced with: the
+        base model scaled to the design's precision
+        (:func:`repro.core.precision.scale_energy` -- the IDENTITY
+        object for bf16), with the approximate-PE multiplier discount
+        applied on top. ``E_MULT`` is the only constant the discount
+        touches, so an approximate design differs from its exact twin
+        in the ``mult`` component alone."""
+        em = prec.scale_energy(self.energy, self.precision)
+        if self.approx is not None and self.approx.mult_discount:
+            em = dataclasses.replace(
+                em, E_MULT=em.E_MULT * (1.0 - self.approx.mult_discount))
+        return em
+
+    @property
+    def accuracy_proxy(self) -> float:
+        """Relative-RMS numerical error proxy of this design: the
+        precision's quantization error and the approximate-PE product
+        error, root-sum-squared (independent error sources). 0.0 for
+        exact bf16 -- the accuracy reference."""
+        q = prec.get(self.precision).quant_rms
+        a = self.approx.rel_rms_error if self.approx is not None else 0.0
+        return math.sqrt(q * q + a * a)
+
     @property
     def label(self) -> str:
         g = self.geometry
+        extra = "" if self.precision == "bf16" else f" {self.precision}"
+        if self.approx is not None and self.approx.mult_discount:
+            extra += f" ~ax{self.approx.mult_discount:.2f}"
         return (f"{self.name}[west={self.west.label} "
-                f"north={self.north.label} {g.rows}x{g.cols}]")
+                f"north={self.north.label} {g.rows}x{g.cols}{extra}]")
 
 
 #: The paper's two fixed designs (16x16, default energy model).
@@ -141,7 +200,20 @@ def resolve_designs(names: Sequence[str],
                     geometry: SAGeometry = PAPER_SA,
                     energy: EnergyModel = DEFAULT_ENERGY
                     ) -> tuple[DesignPoint, ...]:
-    """Look up a list of design names in :func:`named_designs`."""
+    """Look up a list of design names in :func:`named_designs`.
+
+    Duplicate names are rejected: every counter/energy dict downstream
+    is keyed by design name, so a repeated name would silently collapse
+    two entries into one (the documented-but-previously-unenforced
+    uniqueness contract of :class:`DesignPoint.name`).
+    """
+    names = list(names)
+    dupes = sorted({n for n in names if names.count(n) > 1})
+    if dupes:
+        raise ValueError(
+            f"duplicate design name(s) {dupes}: design names key every "
+            f"counter/energy dict in the stack, so duplicates would "
+            f"silently overwrite each other")
     menu = named_designs(geometry, energy)
     bad = [n for n in names if n not in menu]
     if bad:

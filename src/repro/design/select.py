@@ -130,6 +130,30 @@ def select_counters(site_counters: Mapping[str, Mapping[str, float]],
                         candidates=candidates)
 
 
+def pareto_front(objectives: Sequence[Sequence[float]]) -> list[int]:
+    """Indices of the non-dominated points, every objective MINIMIZED.
+
+    Point ``i`` is dominated when some other point is <= on every
+    objective and strictly < on at least one. The design-space sweep
+    (:mod:`repro.design.sweep`) calls this on
+    ``(energy, accuracy_proxy)`` pairs; kept generic (any number of
+    objectives, plain floats) so geometry/latency axes can join later.
+    Duplicated points keep every copy (none strictly improves on the
+    other), and the returned indices preserve input order. O(n^2) --
+    design grids are hundreds of points, not millions.
+    """
+    pts = [tuple(float(v) for v in p) for p in objectives]
+    front = []
+    for i, p in enumerate(pts):
+        dominated = any(
+            all(qv <= pv for qv, pv in zip(q, p))
+            and any(qv < pv for qv, pv in zip(q, p))
+            for j, q in enumerate(pts) if j != i)
+        if not dominated:
+            front.append(i)
+    return front
+
+
 def apply_selection(report, candidates: Sequence[str] | None = None
                     ) -> Selection:
     """Run greedy selection over a :class:`repro.trace.TraceReport` and

@@ -147,12 +147,18 @@ def fused_decode_supported(mcfg: monitor.MonitorConfig) -> bool:
     the fused Pallas decode pass) can price this config.
 
     The split walks ONE stream geometry per pass; a design list spanning
-    multiple geometries needs one pass each, which only the legacy
-    :func:`_rows_counters` fallback does. (The default paper-pair menu
-    is single-geometry, so serving configs hit the split path.)
+    multiple geometries/precisions needs one pass each, which only the
+    legacy :func:`_rows_counters` fallback does, and the decode counter
+    producers bitcast native bf16 streams, so non-bf16 groups also fall
+    back. (The default paper-pair menu is single-geometry bf16, so
+    serving configs hit the split path.)
     """
     from repro.design.evaluate import menu_args
-    return len(menu_args(mcfg.design_list)) == 1
+    groups = menu_args(mcfg.design_list)
+    if len(groups) != 1:
+        return False
+    ((_, precision),) = groups.keys()
+    return precision == "bf16"
 
 
 def _decode_menu(mcfg: monitor.MonitorConfig):
@@ -160,7 +166,7 @@ def _decode_menu(mcfg: monitor.MonitorConfig):
     ``(geometry, menu kwargs, west CounterSpec, north CounterSpec)``."""
     from repro.design.evaluate import menu_args
     from repro.kernels.power_counters.spec import CounterSpec
-    (geom, kw), = menu_args(mcfg.design_list).items()
+    ((geom, _precision), kw), = menu_args(mcfg.design_list).items()
     return (geom, kw,
             CounterSpec(bic_variants=kw["west_bic"], zvg=kw["west_zvg"]),
             CounterSpec(bic_variants=kw["north_bic"],

@@ -39,7 +39,9 @@ def main() -> None:
     ap.add_argument("--mode", default="forward",
                     choices=["forward", "decode"])
     ap.add_argument("--geometry", default="paper16",
-                    choices=sorted(sw.GEOMETRIES))
+                    help="named preset "
+                         f"({sorted(sw.GEOMETRIES)}) or a free-form "
+                         "RxC spec like 8x32")
     ap.add_argument("--segments", default="mantissa",
                     help="BIC segment choice(s), comma-separated "
                          f"(from {sorted(sw.SEGMENTS)})")
@@ -71,6 +73,10 @@ def main() -> None:
 
     archs = tuple(a for a in args.archs.split(",") if a)
     nets = tuple(n for n in args.nets.split(",") if n)
+    try:
+        sw.parse_geometry(args.geometry)
+    except ValueError as e:
+        ap.error(str(e))
     segments = tuple(s for s in args.segments.split(",") if s)
     bad = [s for s in segments if s not in sw.SEGMENTS]
     if bad or not segments:

@@ -26,6 +26,24 @@ GEOMETRIES: dict[str, systolic.SAGeometry] = {
     "mxu128": systolic.MXU_SA,
 }
 
+
+def parse_geometry(name: str) -> systolic.SAGeometry:
+    """Resolve a geometry argument: a named preset (``paper16``,
+    ``mxu128``) or a free-form ``RxC`` spec (``8x32``, ``64x4`` --
+    asymmetric arrays are first-class since the design-space sweep).
+    Bad specs raise ValueError with the accepted forms."""
+    if name in GEOMETRIES:
+        return GEOMETRIES[name]
+    parts = name.lower().split("x")
+    if len(parts) == 2:
+        try:
+            return systolic.SAGeometry(int(parts[0]), int(parts[1]))
+        except ValueError as e:   # non-int parts or rows/cols < 1
+            raise ValueError(
+                f"bad geometry {name!r}: {e}") from None
+    raise ValueError(f"unknown geometry {name!r}: use one of "
+                     f"{sorted(GEOMETRIES)} or an RxC spec like '8x32'")
+
 #: alias of the canonical registry in :mod:`repro.core.bic`
 SEGMENTS = bic.NAMED_SEGMENTS
 
@@ -45,7 +63,7 @@ def make_capture_config(geometry: str = "paper16",
     pure-JAX reference; bit-identical -- see
     :mod:`repro.kernels.power_counters`).
     """
-    geom = GEOMETRIES[geometry]
+    geom = parse_geometry(geometry)
     mcfg = monitor.MonitorConfig(
         geometry=geom, bic_segments=SEGMENTS[segments],
         designs=resolve_designs(designs, geom) if designs else (),

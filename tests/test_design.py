@@ -134,6 +134,40 @@ def test_design_point_validation():
         D.evaluate_operands(A, W, (D.PAPER_BASELINE, D.PAPER_BASELINE))
 
 
+def test_design_point_name_rejects_whitespace():
+    """Regression: names with spaces/newlines/tabs used to validate --
+    they reach CSV rows, report tables, and CLI comma-lists, where an
+    embedded newline silently corrupts the row."""
+    for bad in ("has space", "tab\there", "trailing\n", " lead",
+                "nl\nmid", "a,b", "\x00ctl"):
+        with pytest.raises(ValueError, match="name"):
+            D.DesignPoint(bad)
+    # sanity: the sweep's coordinate names stay legal
+    D.DesignPoint("full-bus@int8@8x32~ax30")
+
+
+def test_resolve_designs_rejects_duplicate_names():
+    """Regression: ``resolve_designs`` used to pass duplicates straight
+    through, and every downstream dict keyed by design name silently
+    collapsed them (N-1 designs priced, no error)."""
+    with pytest.raises(ValueError, match="duplicate.*proposed"):
+        D.resolve_designs(("baseline", "proposed", "proposed"),
+                          systolic.PAPER_SA)
+    # unique lists still resolve in order
+    ds = D.resolve_designs(("baseline", "proposed"), systolic.PAPER_SA)
+    assert [d.name for d in ds] == ["baseline", "proposed"]
+
+
+def test_sa_geometry_rejects_degenerate_shapes():
+    """Regression: SAGeometry(0, 16) used to construct fine and only
+    blow up deep inside stream pricing (or worse, price to zero)."""
+    for r, c in ((0, 16), (16, 0), (-4, 8), (0, 0)):
+        with pytest.raises(ValueError, match="rows >= 1"):
+            systolic.SAGeometry(r, c)
+    g = systolic.SAGeometry(8, 32)          # asymmetric stays legal
+    assert (g.rows, g.cols) == (8, 32)
+
+
 def test_mixed_geometry_designs_require_evaluate_operands():
     A, W = _layer(m=16, k=32, n=16)
     d16 = D.PAPER_PROPOSED

@@ -1,0 +1,306 @@
+"""Tests for the design-space autotuner (repro.design.sweep) and the
+precision layer under it (repro.core.precision).
+
+Load-bearing properties:
+  * transposing the problem AND swapping the operand edges prices
+    consistently: the per-edge counter menus swap BIT-exactly, and the
+    direction-symmetric energy components (streaming / clock / control)
+    match to float tolerance. (Direction-PINNED terms -- result unload,
+    the mult model's input-side gating, the dec-XOR overhead -- are
+    exactly the ones excluded.)
+  * the 8-bit embedded menus bit-match the PR-4 counter path run
+    directly on the embedded words: ``sa_design_report(precision=...)``
+    is the same fused pass, not a parallel implementation;
+  * ``evaluate_batched`` weights are exact (weighted sums, not means);
+  * the pareto front is genuinely non-dominated;
+  * the default grid is >= 200 uniquely-named valid DesignPoints.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import design as D
+from repro.core import precision as prec
+from repro.core import systolic
+from repro.design import sweep as SW
+from repro.kernels import power_counters as pc
+from repro.trace import sweep as tracesweep
+
+from _hypothesis_compat import given, settings, st
+
+MANT = prec.get("bf16").segments["mantissa"]
+
+
+def _ops(m, k, n, zf=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    A = np.abs(rng.standard_normal((m, k))).astype(np.float32)
+    A = np.where(rng.random(A.shape) < zf, 0.0, A)
+    W = (rng.standard_normal((k, n)) * 0.05).astype(np.float32)
+    return jnp.asarray(A), jnp.asarray(W)
+
+
+# -------------------------------------------- transpose + edge-swap symmetry
+@given(seed=st.integers(0, 2 ** 16), zf=st.sampled_from([0.0, 0.5, 0.9]),
+       geom=st.sampled_from([(4, 4), (4, 8), (8, 4), (2, 16)]))
+@settings(max_examples=8, deadline=None)
+def test_transpose_edge_swap_menu_bit_exact(seed, zf, geom):
+    """West menu of the transposed problem == North menu of the original
+    (and vice versa), BIT-exact: both edges run the identical fused
+    counter pass on the identical [K, lanes] bit matrix."""
+    A, W = _ops(12, 32, 20, zf=zf, seed=seed)
+    g = systolic.SAGeometry(*geom)
+    gt = systolic.SAGeometry(geom[1], geom[0])
+    kw = dict(west_bic=(MANT,), north_bic=(MANT,),
+              west_zvg=True, north_zvg=True)
+    menu = systolic.sa_design_report(A, W, g, **kw)
+    menu_t = systolic.sa_design_report(W.T, A.T, gt, **kw)
+    swapped = {"w_": "n_", "n_": "w_"}
+    for key, val in menu.items():
+        twin = key
+        for pre, to in swapped.items():
+            if key.startswith(pre):
+                twin = to + key[len(pre):]
+                break
+        else:
+            if key in ("M", "N", "Mp", "Np", "Tm", "Tn", "rows", "cols",
+                       "unload_reg_traversals", "active_frac",
+                       "nonzero_slots", "zero_fraction"):
+                continue        # direction-pinned facts (checked below)
+            if key == "west_words":
+                twin = "north_words"
+            elif key == "north_words":
+                twin = "west_words"
+        assert float(menu_t[twin]) == float(val), (key, twin)
+    # symmetric facts hold exactly
+    for key in ("cycles", "pe_slots", "gated_overlap", "K"):
+        assert float(menu_t[key]) == float(menu[key]), key
+
+
+@given(seed=st.integers(0, 2 ** 16), zf=st.sampled_from([0.2, 0.7]))
+@settings(max_examples=6, deadline=None)
+def test_transpose_edge_swap_symmetric_energies(seed, zf):
+    """Swapping the design's edges along with the transpose keeps the
+    direction-symmetric energy components equal."""
+    A, W = _ops(24, 48, 16, zf=zf, seed=seed)
+    g, gt = systolic.SAGeometry(4, 8), systolic.SAGeometry(8, 4)
+    d = D.DesignPoint("d", west=D.ZVG, north=D.BIC(MANT), geometry=g)
+    d_sw = D.DesignPoint("d", west=D.BIC(MANT), north=D.ZVG, geometry=gt)
+    ev = D.evaluate_operands(A, W, (d,))["d"]
+    ev_t = D.evaluate_operands(W.T, A.T, (d_sw,))["d"]
+    assert float(ev_t["cycles"]) == float(ev["cycles"])
+    for comp in ("streaming", "clock", "control"):
+        np.testing.assert_allclose(float(ev_t["energy"][comp]),
+                                   float(ev["energy"][comp]),
+                                   rtol=1e-6, err_msg=comp)
+    # the swapped streams themselves swap
+    np.testing.assert_allclose(float(ev_t["h"]), float(ev["v"]), rtol=1e-6)
+    np.testing.assert_allclose(float(ev_t["v"]), float(ev["h"]), rtol=1e-6)
+
+
+# --------------------------------------------------- embedded 8-bit formats
+@pytest.mark.parametrize("pname", ["fp8e4m3", "int8"])
+def test_embedded_menu_bit_matches_direct_counter_path(pname):
+    """The precision path of ``sa_design_report`` must be the SAME fused
+    counter pass as running ``edge_counters`` directly on the embedded
+    words -- bit-for-bit, both edges."""
+    p = prec.get(pname)
+    A, W = _ops(12, 32, 20, zf=0.4, seed=5)
+    g = systolic.SAGeometry(4, 4)
+    segs = (p.segments["mantissa"],)
+    menu = systolic.sa_design_report(A, W, g, west_bic=segs,
+                                     north_bic=segs, west_zvg=True,
+                                     north_zvg=True, precision=pname)
+    a_bits = jnp.moveaxis(systolic._pad_to(prec.quantize_bits(A, p), 4, 0),
+                          1, 0)
+    b_bits = systolic._pad_to(prec.quantize_bits(W, p), 4, 1)
+    spec = pc.CounterSpec(bic_variants=segs, zvg=True)
+    for bits, pre in ((a_bits, "w"), (b_bits, "n")):
+        rows = pc.edge_counters(bits, spec)
+        direct = systolic.menu_lane_sums(rows, pre, segs, True)
+        for key, val in direct.items():
+            assert float(menu[key]) == float(val), key
+
+
+def test_fp8_int8_embedding_invariants():
+    x = jnp.asarray(np.r_[np.linspace(-500, 500, 63), 0.0, -1e-9, 1e-9]
+                    .reshape(11, 6).astype(np.float32))
+    fp8 = prec.quantize_bits(x, prec.get("fp8e4m3"))
+    assert fp8.dtype == jnp.uint16
+    assert int(jnp.max(fp8 & ~jnp.uint16(0x8787))) == 0   # confined layout
+    # every numerically-zero input is zero-detected on the embedded bus
+    zmask = np.asarray(jnp.abs(x) < 2 ** -10)
+    detected = np.asarray((fp8 & 0x7FFF) == 0)
+    assert bool(np.all(detected[zmask]))
+    i8 = prec.quantize_bits(x, prec.get("int8"))
+    assert int(jnp.max(i8 & ~jnp.uint16(0x00FF))) == 0
+    assert bool(np.all(np.asarray(i8)[np.asarray(x == 0.0)] == 0))
+    # all-zero input: the absmax guard must not divide by zero
+    z = prec.quantize_bits(jnp.zeros((4, 4)), prec.get("int8"))
+    assert int(jnp.max(z)) == 0
+
+
+def test_scale_energy_bf16_identity_and_8bit_shrink():
+    from repro.core.power import DEFAULT_ENERGY
+    assert prec.scale_energy(DEFAULT_ENERGY, prec.get("bf16")) \
+        is DEFAULT_ENERGY                      # bitwise-golden safety
+    for pname in ("fp8e4m3", "int8"):
+        p = prec.get(pname)
+        em = prec.scale_energy(DEFAULT_ENERGY, p)
+        assert em.E_MULT == DEFAULT_ENERGY.E_MULT * p.mult_scale
+        assert em.BUS_BITS == p.bits and em.MANT_BITS == p.mant_bits
+        assert em.REG_BITS_PER_PE < DEFAULT_ENERGY.REG_BITS_PER_PE
+
+
+def test_evaluate_rejects_mixed_precision_menu():
+    A, W = _ops(8, 16, 8)
+    d16 = D.PAPER_PROPOSED
+    d8 = D.DesignPoint("p8", west=D.ZVG,
+                       north=D.BIC(prec.get("int8").segments["mantissa"]),
+                       precision="int8")
+    menu = systolic.sa_design_report(A, W)
+    with pytest.raises(ValueError, match="precision"):
+        D.evaluate(menu, (d16, d8))
+    ev = D.evaluate_operands(A, W, (d16, d8))   # the supported path
+    assert set(ev) == {"proposed", "p8"}
+
+
+# ------------------------------------------------------- weighted batching
+def test_weighted_evaluate_batched_matches_manual():
+    rng = np.random.default_rng(3)
+    A3 = jnp.asarray(rng.standard_normal((3, 16, 24)).astype(np.float32))
+    W3 = jnp.asarray(rng.standard_normal((3, 24, 16)).astype(np.float32))
+    wts = jnp.asarray([0.5, 2.0, 7.25], jnp.float32)
+    designs = (D.PAPER_BASELINE, D.PAPER_PROPOSED)
+    evw = D.evaluate_batched(A3, W3, designs, weights=wts)
+    manual = [D.evaluate_operands(A3[i], W3[i], designs) for i in range(3)]
+    for name in ("baseline", "proposed"):
+        want = sum(float(w) * float(m[name]["energy"]["total"])
+                   for w, m in zip(np.asarray(wts), manual))
+        np.testing.assert_allclose(float(evw[name]["energy"]["total"]),
+                                   want, rtol=1e-5)
+        zf = sum(float(w) * float(m[name]["zero_fraction"])
+                 for w, m in zip(np.asarray(wts), manual)) / float(wts.sum())
+        np.testing.assert_allclose(float(evw[name]["zero_fraction"]), zf,
+                                   rtol=1e-5)
+    with pytest.raises(ValueError, match="weights"):
+        D.evaluate_batched(A3, W3, designs, weights=jnp.ones(2))
+
+
+# ------------------------------------------------------------ pareto front
+def test_pareto_front_non_dominated():
+    pts = [(1.0, 5.0), (2.0, 2.0), (5.0, 1.0), (3.0, 3.0),  # (3,3) dominated
+           (1.0, 5.0),                                      # duplicate kept
+           (0.5, 6.0)]
+    front = D.pareto_front(pts)
+    assert front == [0, 1, 2, 4, 5]
+    for i in front:     # property: nothing in the input dominates them
+        assert not any(all(q <= p for q, p in zip(pts[j], pts[i]))
+                       and any(q < p for q, p in zip(pts[j], pts[i]))
+                       for j in range(len(pts)) if j != i)
+    assert D.pareto_front([(1.0,)]) == [0]
+    assert D.pareto_front([]) == []
+
+
+# -------------------------------------------------------------------- grid
+def test_sweep_grid_size_names_and_coords():
+    grid = SW.sweep_grid()
+    assert len(grid) == 320
+    names = [d.name for d in grid]
+    assert len(set(names)) == len(names)
+    assert SW.REFERENCE in names and SW.FIXED in names
+    quick = SW.sweep_grid(geometries=SW.QUICK_GEOMETRIES)
+    assert len(quick) >= 200
+    # every coordinate is recoverable and every point validated on
+    # construction (DesignPoint.__post_init__ ran for each)
+    byname = {d.name: d for d in grid}
+    d = byname["full-bus@int8@8x32~ax30"]
+    assert (d.precision, d.geometry.rows, d.geometry.cols) == ("int8", 8, 32)
+    assert d.approx.mult_discount == pytest.approx(0.30)
+    assert d.accuracy_proxy > byname["full-bus@int8@8x32"].accuracy_proxy
+    assert byname[SW.REFERENCE].accuracy_proxy == 0.0
+    # int8 has no exponent field, so no mant-exp scheme
+    assert not any(n.startswith("mant-exp@int8") for n in names)
+    assert any(n.startswith("mant-exp@fp8e4m3") for n in names)
+
+
+def test_approx_pe_validation_and_priced_energy():
+    with pytest.raises(ValueError):
+        D.ApproxPE(mult_discount=1.0)
+    with pytest.raises(ValueError):
+        D.ApproxPE(mult_discount=-0.1)
+    with pytest.raises(ValueError):
+        D.ApproxPE(mult_discount=0.3, rel_rms_error=-1.0)
+    d = D.PAPER_PROPOSED.with_(name="ax", approx=D.ApproxPE(0.25, 0.01))
+    em = d.priced_energy()
+    assert em.E_MULT == pytest.approx(d.energy.E_MULT * 0.75)
+    assert d.accuracy_proxy == pytest.approx(0.01)
+    d8 = d.with_(name="ax8", precision="int8")
+    p8 = prec.get("int8")
+    assert d8.accuracy_proxy == pytest.approx(
+        float(np.hypot(p8.quant_rms, 0.01)))
+
+
+# ------------------------------------------------------------ geometry CLI
+def test_parse_geometry_presets_and_freeform():
+    assert tracesweep.parse_geometry("paper16") is systolic.PAPER_SA
+    g = tracesweep.parse_geometry("8x32")
+    assert (g.rows, g.cols) == (8, 32)
+    assert tracesweep.parse_geometry("64X4").rows == 64   # case-insensitive
+    for bad in ("0x16", "8x", "axb", "8x32x2", "paper17"):
+        with pytest.raises(ValueError):
+            tracesweep.parse_geometry(bad)
+
+
+# ------------------------------------------------------------------- e2e
+def test_build_sweep_report_end_to_end_synthetic_sites():
+    """Tiny grid x synthetic sites through the real pipeline: one
+    batched pricing pass, savings columns, pareto marking, writers."""
+    rng = np.random.default_rng(11)
+    A3 = np.abs(rng.standard_normal((2, 24, 32))).astype(np.float32)
+    A3[0][rng.random((24, 32)) < 0.6] = 0.0
+    W3 = (rng.standard_normal((2, 32, 16)) * 0.05).astype(np.float32)
+    sites = SW.SweepSites(A=jnp.asarray(A3), W=jnp.asarray(W3),
+                          weights=jnp.asarray([4.0, 1.0], jnp.float32),
+                          names=["s0", "s1"], sample=(24, 32, 16))
+    grid = SW.sweep_grid(geometries=((16, 16), (8, 32)),
+                         precisions=("bf16", "int8"))
+    rep = SW.build_sweep_report(sites, grid)
+    assert len(rep.rows) == len(grid) and rep.front
+    ref = next(r for r in rep.rows if r["name"] == SW.REFERENCE)
+    assert ref["saving_total"] == 0.0 and ref["saving_streaming"] == 0.0
+    for i in rep.front:
+        assert rep.rows[i]["on_front"]
+    # non-dominated in (energy, accuracy) among the priced rows
+    objs = [(r["energy_total"], r["accuracy_proxy"]) for r in rep.rows]
+    assert rep.front == D.pareto_front(objs)
+    assert "pareto front" in rep.table()
+    # writers round-trip through the shared report helpers
+    import json
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        rep.to_json(f"{td}/s.json")
+        rep.to_csv(f"{td}/s.csv")
+        with open(f"{td}/s.json") as f:
+            payload = json.load(f)
+        assert payload["n_points"] == len(grid)
+        assert payload["front"] == [rep.rows[i]["name"] for i in rep.front]
+        with open(f"{td}/s.csv") as f:
+            assert len(f.readlines()) == len(grid) + 1
+    # the grid must contain the reference/fixed pair
+    with pytest.raises(ValueError, match="must contain"):
+        SW.build_sweep_report(sites, grid[2:])
+
+
+def test_collect_sites_fits_and_weights():
+    sites = SW.collect_sites(nets=(), archs=("qwen1.5-0.5b",), seq=8,
+                             batch=1, sample=(24, 24, 24))
+    B = sites.A.shape[0]
+    assert B >= 4 and sites.A.shape == (B, 24, 24)
+    assert sites.W.shape == (B, 24, 24)
+    assert sites.A.dtype == jnp.bfloat16
+    assert sites.weights.shape == (B,)
+    assert bool(jnp.all(sites.weights > 0))
+    assert len(sites.names) == B
+    assert all(n.startswith("qwen1.5-0.5b:") for n in sites.names)
+    with pytest.raises(ValueError, match="no matmul sites"):
+        SW.collect_sites(nets=(), archs=())
